@@ -1,0 +1,83 @@
+"""Shared harness for the FAME paper-figure benchmarks (Figs. 4–7).
+
+Runs both applications × all five Table-1 configs × all three inputs and
+aggregates the traces. Everything is deterministic (the paper averages three
+runs of a stochastic LLM; our oracle is exact, so one run per cell — noted in
+EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.apps import log_analytics as la
+from repro.apps import research_summary as rs
+from repro.core.config import CONFIGS
+from repro.core.runtime import FameRuntime
+
+APPS = {"RS": rs, "LA": la}
+CONFIG_ORDER = ["E", "N", "C", "M", "M+C"]
+
+
+@dataclasses.dataclass
+class CellResult:
+    app: str
+    config: str
+    inp: str
+    statuses: List[str]
+    e2e_s: List[float]                 # per query
+    agent_split_s: List[Dict[str, float]]
+    in_tokens: List[int]
+    out_tokens: List[int]
+    llm_cents: List[float]
+    faas_agent_cents: List[float]
+    faas_mcp_cents: List[float]
+    tool_calls: List[int]
+    cache_hits: int
+
+    @property
+    def dnf(self):
+        return [s != "SUCCEEDED" for s in self.statuses]
+
+
+def run_cell(app_key: str, config: str, inp: str,
+             fusion: str = "singleton") -> CellResult:
+    app = APPS[app_key]
+    rt = FameRuntime(config=CONFIGS[config], fusion_mode=fusion)
+    for role, o in app.build_oracles().items():
+        rt.set_llm(role, o)
+    rt.deploy_mcp(app.APP.servers, app.APP.sources)
+    res = rt.run_session(f"{app_key}-{inp}", app.APP.queries(inp))
+    e2e, splits, itoks, otoks, llmc, agc, mcpc, calls = [], [], [], [], [], [], [], []
+    for tr in res.traces:
+        faas = [s for s in tr.spans if s.kind == "faas"]
+        e2e.append(max((s.t_end for s in faas), default=0)
+                   - min((s.t_start for s in faas), default=0))
+        split = {}
+        for agent in ("planner", "actor", "evaluator"):
+            split[agent] = sum(s.duration for s in faas
+                               if s.name == f"fame-{agent}")
+        split["llm_s"] = tr.duration_of("llm")
+        split["mcp_s"] = tr.duration_of("mcp")
+        splits.append(split)
+        i, o = tr.llm_tokens()
+        itoks.append(i)
+        otoks.append(o)
+        cb = tr.cost_breakdown()
+        llmc.append(cb["llm_cents"])
+        agc.append(cb["faas_agent_cents"])
+        mcpc.append(cb["faas_mcp_cents"])
+        calls.append(sum(1 for s in tr.spans if s.kind == "mcp"
+                         and s.attrs.get("method") == "tools/call"
+                         or (s.kind == "mcp" and s.attrs.get("cache_hit"))))
+    return CellResult(app_key, config, inp, res.statuses, e2e, splits,
+                      itoks, otoks, llmc, agc, mcpc, calls, rt.cache.hits)
+
+
+def run_matrix(fusion: str = "singleton"):
+    out = {}
+    for app_key, app in APPS.items():
+        for config in CONFIG_ORDER:
+            for inp in app.APP.inputs:
+                out[(app_key, config, inp)] = run_cell(app_key, config, inp,
+                                                       fusion=fusion)
+    return out

@@ -1,0 +1,35 @@
+"""Fig. 4 — End-to-end workflow execution latencies per (app, input, query,
+config), with per-agent splits, tool-call counts and DNF tags."""
+from __future__ import annotations
+
+from benchmarks.fame_common import CONFIG_ORDER, run_matrix
+
+
+def main(matrix=None):
+    matrix = matrix or run_matrix()
+    print("fig4,app,input,query,config,e2e_s,planner_s,actor_s,evaluator_s,"
+          "tool_calls,dnf")
+    derived = {}
+    for (app, config, inp), cell in sorted(matrix.items()):
+        for qi in range(3):
+            sp = cell.agent_split_s[qi]
+            print(f"fig4,{app},{inp},Q{qi + 1},{config},"
+                  f"{cell.e2e_s[qi]:.1f},{sp['planner']:.1f},{sp['actor']:.1f},"
+                  f"{sp['evaluator']:.1f},{cell.tool_calls[qi]},"
+                  f"{int(cell.dnf[qi])}")
+    # headline: max speedup of M+C vs worst baseline on completed queries
+    best = 0.0
+    for (app, config, inp), cell in matrix.items():
+        if config != "M+C":
+            continue
+        for qi in range(3):
+            for base in ("E", "N"):
+                b = matrix[(app, base, inp)]
+                if not b.dnf[qi] and cell.e2e_s[qi] > 0:
+                    best = max(best, b.e2e_s[qi] / cell.e2e_s[qi])
+    print(f"fig4_derived,max_speedup_MC_vs_baseline,{best:.1f}x")
+    return {"max_speedup": best}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Fig. 5 — Input/output LLM tokens per workflow invocation + LLM cost."""
+from __future__ import annotations
+
+from benchmarks.fame_common import CONFIG_ORDER, run_matrix
+
+
+def main(matrix=None):
+    matrix = matrix or run_matrix()
+    print("fig5,app,input,query,config,in_tokens,out_tokens,llm_cents")
+    for (app, config, inp), cell in sorted(matrix.items()):
+        for qi in range(3):
+            print(f"fig5,{app},{inp},Q{qi + 1},{config},{cell.in_tokens[qi]},"
+                  f"{cell.out_tokens[qi]},{cell.llm_cents[qi]:.4f}")
+    # headline: input-token reduction, session totals N -> best of {C,M,M+C}
+    best = 0.0
+    for app in ("RS", "LA"):
+        for inp in {k[2] for k in matrix if k[0] == app}:
+            n = sum(matrix[(app, "N", inp)].in_tokens)
+            for c in ("C", "M", "M+C"):
+                m = sum(matrix[(app, c, inp)].in_tokens)
+                if n:
+                    best = max(best, (n - m) / n)
+    print(f"fig5_derived,max_input_token_reduction,{best * 100:.0f}%")
+    return {"max_token_reduction": best}
+
+
+if __name__ == "__main__":
+    main()

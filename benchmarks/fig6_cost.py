@@ -1,0 +1,33 @@
+"""Fig. 6 — Monetary cost decomposition: LLM vs agent-FaaS vs MCP-FaaS."""
+from __future__ import annotations
+
+from benchmarks.fame_common import CONFIG_ORDER, run_matrix
+
+
+def main(matrix=None):
+    matrix = matrix or run_matrix()
+    print("fig6,app,input,config,llm_cents,agent_faas_cents,mcp_faas_cents,"
+          "total_cents,llm_share")
+    totals = {}
+    for (app, config, inp), cell in sorted(matrix.items()):
+        llm = sum(cell.llm_cents)
+        ag = sum(cell.faas_agent_cents)
+        mcp = sum(cell.faas_mcp_cents)
+        tot = llm + ag + mcp
+        totals[(app, config, inp)] = tot
+        share = llm / tot if tot else 0
+        print(f"fig6,{app},{inp},{config},{llm:.3f},{ag:.3f},{mcp:.3f},"
+              f"{tot:.3f},{share:.2f}")
+    best = 0.0
+    for app in ("RS", "LA"):
+        for inp in {k[2] for k in totals if k[0] == app}:
+            base = max(totals[(app, c, inp)] for c in ("E", "N"))
+            ours = min(totals[(app, c, inp)] for c in ("C", "M", "M+C"))
+            if base:
+                best = max(best, (base - ours) / base)
+    print(f"fig6_derived,max_cost_reduction,{best * 100:.0f}%")
+    return {"max_cost_reduction": best}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Fig. 7b — Singleton vs consolidated MCP deployment under a 1-RPS synthetic
+workload (§5.3.2): per-request total MCP latency timeline, cold starts, cost.
+
+Mimics the paper's methodology: a Step-Function-like driver fires the
+applications' MCP call sequence (each server invoked twice — two ReAct
+iterations) at 1 RPS for 120 s, without spending agent LLM tokens."""
+from __future__ import annotations
+
+from repro.apps import log_analytics as la
+from repro.apps import research_summary as rs
+from repro.core.config import CONFIGS
+from repro.core.mcp import rpc_call
+from repro.core.runtime import FameRuntime
+from repro.core.telemetry import Trace, use_trace
+
+SEQUENCES = {
+    "RS": [("download_paper", {"title": rs.data.title_of("P1")}),
+           ("summarize_text", {"query": "Summarize Introduction",
+                               "text": "$inline"})] * 2,
+    "LA": [("filter_by_keyword", {"file": "/logs/apache.log", "keyword": "AH01630"}),
+           ("mean", {"values": "[1.0, 2.0, 3.0]"}),
+           ("line_plot", {"data": "[1.0, 2.0, 3.0]", "title": "t"})] * 2,
+}
+
+
+def run_workload(app_key: str, fusion: str, *, rps: float = 1.0,
+                 duration_s: float = 120.0):
+    app = {"RS": rs, "LA": la}[app_key]
+    rt = FameRuntime(config=CONFIGS["E"], fusion_mode=fusion)
+    rt.deploy_mcp(app.APP.servers, app.APP.sources)
+    seq = SEQUENCES[app_key]
+    points = []
+    n = int(duration_s * rps)
+    for i in range(n):
+        t_arrival = i / rps
+        trace = Trace()
+        with use_trace(trace):
+            t = t_arrival
+            for tool, args in seq:
+                fn = rt.resolve_tool_function(tool)
+                if args.get("text") == "$inline":
+                    args = dict(args, text=rs.data.paper_content("P1")[:2000])
+                _, t = rt.platform.invoke(fn, {"body": rpc_call(tool, args)}, t)
+        points.append((t_arrival, t - t_arrival))
+    stats = rt.platform.stats
+    cold = sum(s["cold_starts"] for k, s in stats.items() if k.startswith("mcp"))
+    cost = sum(s["cost_cents"] for k, s in stats.items() if k.startswith("mcp"))
+    calls = sum(s["invocations"] for k, s in stats.items() if k.startswith("mcp"))
+    return points, cold, cost / max(calls, 1)
+
+
+def main():
+    print("fig7b,app,mode,t_arrival_s,total_mcp_latency_s")
+    out = {}
+    for app in ("RS", "LA"):
+        for mode in ("singleton", "consolidated"):
+            pts, cold, cents_per_call = run_workload(app, mode)
+            for t, lat in pts[:10] + pts[30:40:3]:     # head + stable sample
+                print(f"fig7b,{app},{mode},{t:.0f},{lat:.2f}")
+            stable = [l for t, l in pts if t >= 40]
+            avg_stable = sum(stable) / len(stable)
+            print(f"fig7b_summary,{app},{mode},cold_starts={cold},"
+                  f"stable_latency_s={avg_stable:.2f},"
+                  f"cents_per_call={cents_per_call:.4f}")
+            out[(app, mode)] = (cold, avg_stable, cents_per_call)
+    for app in ("RS", "LA"):
+        s, c = out[(app, "singleton")], out[(app, "consolidated")]
+        print(f"fig7b_derived,{app},cold_start_reduction,{s[0]}->{c[0]},"
+              f"stable_speedup,{s[1] / c[1]:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Re-derive cost summaries from the dry-run's saved HLO artifacts
+(results/hlo/*.hlo.zst) without recompiling — parser iterations are free."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import zstandard
+
+from repro.launch import hlo_cost
+
+
+def reanalyze(json_path: str, suffix: str):
+    data = json.load(open(json_path))
+    for r in data["results"]:
+        tag = f"{r['arch']}_{r['shape']}_{suffix}"
+        path = f"results/hlo/{tag}.hlo.zst"
+        if not os.path.exists(path):
+            print(f"  missing {path}; keeping stored numbers")
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(
+            open(path, "rb").read()).decode()
+        cost = hlo_cost.analyze(hlo)
+        r["flops"] = cost.flops
+        r["bytes_accessed"] = cost.bytes_accessed
+        r["bytes_min"] = cost.bytes_min
+        r["collectives"] = {"total_bytes": cost.collective_bytes,
+                            "bytes": cost.collective_bytes_by_op,
+                            "counts": cost.collective_counts}
+    json.dump(data, open(json_path, "w"), indent=1)
+    print(f"reanalyzed {len(data['results'])} cells -> {json_path}")
+
+
+if __name__ == "__main__":
+    reanalyze("results/dryrun_single_pod.json", "sp")
+    reanalyze("results/dryrun_multi_pod.json", "mp")

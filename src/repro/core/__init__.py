@@ -1,0 +1,7 @@
+"""FAME core — the paper's contribution as a composable library."""
+from repro.core.config import CONFIGS, MemoryConfig  # noqa: F401
+from repro.core.faas import FaaSPlatform, FunctionDef  # noqa: F401
+from repro.core.mcp import FastMCP  # noqa: F401
+from repro.core.runtime import FameRuntime  # noqa: F401
+from repro.core.telemetry import Trace, use_trace  # noqa: F401
+from repro.core.wrapper import fame_wrapper, wrap_server  # noqa: F401

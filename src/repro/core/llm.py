@@ -1,0 +1,151 @@
+"""LLM backends for FAME agents.
+
+Two interchangeable backends behind one interface:
+
+* ``ScriptedOracle`` — a deterministic planner/actor/evaluator "LLM" whose
+  behaviour is a function of its VISIBLE CONTEXT (exactly the paper's
+  methodology for isolating systems effects, §5.3.2): if a needed fact (paper
+  title, log path) is absent from context it hallucinates (→ DNF, like config
+  E); if prior tool outputs are visible in injected memory it reuses them
+  (§4.2 memory prompt), else it re-calls tools. Token counts are computed
+  from the ACTUAL prompt strings FAME assembles.
+
+* ``JaxLLM`` — the real serving engine (repro.serving) hosting any assigned
+  architecture (``--arch``); tokenize → prefill → decode. Used by
+  examples/serve_agents.py and integration tests.
+
+Latency model: t = base + in_tokens·prefill_rate + out_tokens·decode_rate.
+``rates_for_arch`` derives the rates from the architecture's dry-run roofline
+terms when results/dryrun_single_pod.json is present (serving-latency ←
+roofline coupling), else falls back to GPT-4o-mini-like API constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.pricing import PRICING
+from repro.core.telemetry import emit
+
+
+def count_tokens(text: str) -> int:
+    """Deterministic token estimate (≈4 chars/token, GPT-family heuristic)."""
+    return max(1, math.ceil(len(text) / 4))
+
+
+@dataclasses.dataclass
+class LLMResponse:
+    text: str
+    input_tokens: int
+    output_tokens: int
+    latency_s: float
+    cost_cents: float
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    base_s: float = 0.45
+    per_in_tok_s: float = 9e-6          # prefill-bound
+    per_out_tok_s: float = 0.018        # decode-bound (~55 tok/s)
+
+
+def rates_for_arch(arch: Optional[str], results_path: str = "results/dryrun_single_pod.json"):
+    """Roofline-informed serving rates for an assigned architecture."""
+    if arch is None or not os.path.exists(results_path):
+        return LatencyModel()
+    try:
+        data = json.load(open(results_path))
+        cells = {(r["arch"], r["shape"]): r for r in data.get("results", [])}
+        pre = cells.get((arch, "prefill_32k"))
+        dec = cells.get((arch, "decode_32k"))
+        if not pre or not dec:
+            return LatencyModel()
+        from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+        def step_time(r):
+            return max(r["flops"] / PEAK_FLOPS_BF16,
+                       r["bytes_accessed"] / HBM_BW,
+                       r["collectives"]["total_bytes"] / ICI_BW)
+        pre_tokens = 32768 * 32
+        dec_tokens = 128
+        return LatencyModel(base_s=0.05,
+                            per_in_tok_s=step_time(pre) / pre_tokens,
+                            per_out_tok_s=step_time(dec) / dec_tokens)
+    except Exception:
+        return LatencyModel()
+
+
+class LLMBackend:
+    """Base: meters tokens/latency/cost; subclasses implement _generate."""
+
+    def __init__(self, latency: Optional[LatencyModel] = None, name: str = "llm"):
+        self.latency = latency or LatencyModel()
+        self.name = name
+
+    def chat(self, system: str, context: str, ctx=None) -> LLMResponse:
+        prompt = system + "\n" + context
+        in_tok = count_tokens(prompt)
+        text = self._generate(system, context)
+        out_tok = count_tokens(text)
+        lat = (self.latency.base_s + in_tok * self.latency.per_in_tok_s
+               + out_tok * self.latency.per_out_tok_s)
+        cost = PRICING.llm_cost(in_tok, out_tok)
+        t0 = ctx.now() if ctx is not None else 0.0
+        if ctx is not None:
+            ctx.charge(lat)
+        emit("llm", self.name, t0, t0 + lat, input_tokens=in_tok,
+             output_tokens=out_tok, cost_cents=cost)
+        return LLMResponse(text, in_tok, out_tok, lat, cost)
+
+    def _generate(self, system: str, context: str) -> str:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Scripted oracle
+# ---------------------------------------------------------------------------
+
+
+class ScriptedOracle(LLMBackend):
+    """Deterministic role-conditioned generator.
+
+    The oracle inspects only what a real LLM would see — the system prompt and
+    the assembled context string — and emits valid JSON plans / tool calls /
+    evaluations. App-specific planning rules are registered by the
+    applications (see repro.apps.*), keyed by trigger phrases.
+    """
+
+    def __init__(self, latency: Optional[LatencyModel] = None,
+                 use_memory_prompt: bool = True, name: str = "oracle"):
+        super().__init__(latency, name)
+        self.rules: List[Tuple[Any, Any]] = []     # (match_fn, respond_fn)
+        self.use_memory_prompt = use_memory_prompt
+
+    def add_rule(self, match_fn, respond_fn):
+        self.rules.append((match_fn, respond_fn))
+
+    def _generate(self, system: str, context: str) -> str:
+        for match_fn, respond_fn in self.rules:
+            if match_fn(system, context):
+                return respond_fn(system, context, self)
+        return json.dumps({"error": "no rule matched", "hallucination": True})
+
+
+# ---------------------------------------------------------------------------
+# JaxLLM — real serving engine backend
+# ---------------------------------------------------------------------------
+
+
+class JaxLLM(LLMBackend):
+    def __init__(self, engine, max_new_tokens: int = 48,
+                 latency: Optional[LatencyModel] = None):
+        super().__init__(latency or LatencyModel(base_s=0.02), name="jaxllm")
+        self.engine = engine
+        self.max_new_tokens = max_new_tokens
+
+    def _generate(self, system: str, context: str) -> str:
+        return self.engine.generate(system + "\n" + context,
+                                    max_new_tokens=self.max_new_tokens)

@@ -1,0 +1,58 @@
+"""MCP invocation cache (§3.3.2): S3-backed, content-hash keys, TTL.
+
+Cache key = H(tool name, canonicalized arguments); entries live in an object
+store bucket with the TTL in metadata. Developers set per-tool TTLs —
+``-1`` (infinite; e.g. DOI downloads), ``0`` (never cache; e.g. stock quotes),
+or a finite number of seconds.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Any, Optional, Tuple
+
+from repro.core.objectstore import ObjectStore
+from repro.core.telemetry import emit
+
+CACHE_BUCKET = "fame-mcp-cache"
+
+
+def cache_key(tool: str, args: dict) -> str:
+    canon = json.dumps({"tool": tool, "args": args}, sort_keys=True, default=str)
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+class CacheManager:
+    def __init__(self, store: ObjectStore, *, enabled: bool = True,
+                 upload_latency_s: float = 0.19, lookup_latency_s: float = 0.03):
+        self.store = store
+        self.enabled = enabled
+        self.upload_latency_s = upload_latency_s     # §5.3.1 measured 0.19s
+        self.lookup_latency_s = lookup_latency_s
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, tool: str, args: dict, ttl_s: float,
+               t: Optional[float] = None) -> Tuple[bool, Any]:
+        if not self.enabled or ttl_s == 0:
+            return False, None
+        key = cache_key(tool, args)
+        obj = self.store.get(CACHE_BUCKET, key, t=t)
+        if obj is None:
+            self.misses += 1
+            emit("cache", tool, t or 0, t or 0, hit=False)
+            return False, None
+        self.hits += 1
+        emit("cache", tool, t or 0, t or 0, hit=True)
+        return True, json.loads(obj.data.decode())
+
+    def store_latency(self) -> float:
+        return self.upload_latency_s
+
+    def put(self, tool: str, args: dict, result: Any, ttl_s: float,
+            t: Optional[float] = None):
+        if not self.enabled or ttl_s == 0:
+            return
+        key = cache_key(tool, args)
+        self.store.put(CACHE_BUCKET, key, json.dumps(result, default=str).encode(),
+                       {"ttl_s": None if ttl_s < 0 else ttl_s, "tool": tool}, t=t)

@@ -1,0 +1,46 @@
+"""Elastic scaling: re-derive the mesh from surviving devices and reshard.
+
+On node loss the job restarts on fewer chips: ``best_mesh_shape`` picks the
+largest valid (data, model) factorization of the surviving device count that
+keeps the model axis divisibility constraints, and ``reshard_tree`` places a
+restored (host) checkpoint onto the new mesh. Together with
+``checkpoint.restore(shardings=...)`` this is restart-elasticity: the same
+checkpoint serves any mesh size (tested in tests/test_checkpoint_ft.py and
+test_elastic.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def best_mesh_shape(n_devices: int, *, model_parallel: int = 16,
+                    min_model: int = 1) -> Tuple[int, int]:
+    """Largest (data, model) grid for n_devices, preferring the target TP
+    width and degrading gracefully (16 → 8 → 4 ... ) when devices are lost."""
+    tp = 1
+    while tp * 2 <= min(model_parallel, n_devices):
+        tp *= 2                                   # largest power-of-two TP
+    while tp > min_model and n_devices % tp:
+        tp //= 2
+    tp = max(tp, min_model)
+    return (n_devices // tp, tp)
+
+
+def make_elastic_mesh(devices: Optional[Sequence] = None, *,
+                      model_parallel: int = 16) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    data, model = best_mesh_shape(len(devices), model_parallel=model_parallel)
+    import numpy as np
+    arr = np.array(devices[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_tree(tree, mesh: Mesh, pspec_tree):
+    """Place a (host or differently-sharded) pytree onto ``mesh``."""
+    return jax.tree.map(
+        lambda x, ps: jax.device_put(x, NamedSharding(mesh, ps)),
+        tree, pspec_tree,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))

@@ -1,0 +1,83 @@
+"""Fault tolerance for the training/serving loops.
+
+- ``FaultTolerantLoop``: checkpoint/restart supervision — run a step function,
+  checkpoint every N steps (async), and on failure restore the latest
+  checkpoint and resume (optionally on a *different* device count — elastic).
+- ``Heartbeat``: liveness monitor hook (wall-clock watchdog).
+- Straggler mitigation for the FaaS layer lives in core/faas.py (speculative
+  re-execution); for the synchronous training loop the equivalent lever is
+  deterministic data skip-ahead on restart, implemented here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_step_dir, restore
+
+
+@dataclasses.dataclass
+class LoopReport:
+    steps_run: int
+    restarts: int
+    final_step: int
+
+
+class Heartbeat:
+    def __init__(self, timeout_s: float = 300.0):
+        self.timeout_s = timeout_s
+        self._last = time.monotonic()
+
+    def beat(self):
+        self._last = time.monotonic()
+
+    @property
+    def alive(self) -> bool:
+        return time.monotonic() - self._last < self.timeout_s
+
+
+class FaultTolerantLoop:
+    """Supervised step loop with periodic async checkpoints + auto-restart.
+
+    ``step_fn(state, step) -> state``; ``state`` is a pytree (params, opt,
+    data-cursor...). Injected failures (tests) raise from step_fn; the loop
+    restores and replays. Data determinism: the data cursor lives IN the
+    state, so skip-ahead on restore is automatic.
+    """
+
+    def __init__(self, ckpt_dir: str, step_fn: Callable, *,
+                 ckpt_every: int = 20, max_restarts: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.step_fn = step_fn
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.ckpt = AsyncCheckpointer(ckpt_dir)
+        self.heartbeat = Heartbeat()
+
+    def run(self, state, *, start_step: int = 0, num_steps: int = 100,
+            shardings=None) -> tuple:
+        step = start_step
+        restarts = 0
+        steps_run = 0
+        if latest_step_dir(self.ckpt_dir) is not None:
+            state, step = restore(self.ckpt_dir, state, shardings=shardings)
+        while step < num_steps:
+            try:
+                state = self.step_fn(state, step)
+                step += 1
+                steps_run += 1
+                self.heartbeat.beat()
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save(step, state)
+            except Exception:  # noqa: BLE001 — supervised restart
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                self.ckpt.wait()
+                if latest_step_dir(self.ckpt_dir) is not None:
+                    state, step = restore(self.ckpt_dir, state, shardings=shardings)
+                # else: restart from the initial state (step unchanged)
+        self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return state, LoopReport(steps_run, restarts, step)

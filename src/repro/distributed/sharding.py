@@ -1,0 +1,205 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style), per phase.
+
+Parameters carry *logical* axis names (see models/layers.py ParamDef); a rule
+set maps those to physical mesh axes. Single-pod mesh: ("data", "model");
+multi-pod adds a leading "pod" axis that joins the FSDP/batch dimension.
+
+Baseline layout (paper-faithful starting point; §Perf iterates from here):
+  - weights:    TP over "model" (heads / mlp / vocab / rnn / inner),
+                FSDP over ("pod","data") on the embed dim
+  - batch:      over ("pod","data")
+  - KV cache:   sequence-sharded over "model" (decode context parallelism —
+                the softmax/psum combine is handled by SPMD partitioning)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def rules_for(mesh: Mesh, phase: str, *, shard_batch: bool = True,
+              weight_stationary: bool = False,
+              expert_parallel: bool = False) -> dict:
+    """Baseline layout, or the §Perf `weight_stationary` decode layout.
+
+    weight_stationary (decode only): activations are tiny at one-token-per-
+    sequence, so REPLICATE them over the batch axes and fully 2D-shard every
+    weight — matmuls contract against sharded weights and psum small
+    activations instead of all-gathering multi-GB weights each layer (the
+    baseline's dominant decode collective). KV caches stay (batch→data,
+    seq→model)-sharded.
+    """
+    axes = mesh.axis_names
+    multi_pod = "pod" in axes
+    fsdp = ("pod", "data") if multi_pod else ("data",)
+    batch = fsdp if shard_batch else ()
+    rules = {
+        "phase": phase,
+        "batch": batch,
+        "cache_batch": batch,
+        "fsdp": fsdp,
+        "vocab": ("model",),
+        "embed": fsdp,
+        "heads": ("model",),
+        "kv_heads": (),
+        "head_dim": (),
+        "mlp": ("model",),
+        "experts": (),
+        "moe_embed": fsdp,
+        "moe_tokens": batch,      # xe group dim (default: follow the batch)
+        "experts_run": (),        # xe expert dim (EP mode: the fsdp axis)
+        "rnn": ("model",),
+        # xLSTM inner dims: replicated over `model` (§Perf iteration 2) —
+        # TP of a 2048-wide recurrence over 16 shards made every mLSTM chunk
+        # all-gather its state/qkv (45GB/step); a 350M-class recurrent model
+        # wants pure data parallelism on this mesh.
+        "inner": (),
+        "inner_out": (),
+        "slstm_inner": (),
+        "conv": (),
+        "norm": (),
+        "layers": (),
+        "kv_seq": ("model",),
+        None: (),
+    }
+    if weight_stationary:
+        assert phase == "decode", "weight-stationary layout is a decode mode"
+        # Activations replicate; weights keep their 2D sharding and are
+        # contracted IN PLACE (psum of small partials). Caches keep the
+        # sharded batch via "cache_batch".
+        rules["batch"] = ()
+        rules["moe_tokens"] = ()
+    if expert_parallel:
+        # experts live on the fsdp axis; tokens all-to-all to their expert
+        rules["experts"] = fsdp
+        rules["moe_embed"] = ()
+        rules["experts_run"] = fsdp
+        rules["moe_tokens"] = ()
+    return rules
+
+
+def _axes_to_spec(axes: Sequence[Optional[str]], rules: dict) -> P:
+    out = []
+    for a in axes:
+        phys = rules.get(a, ())
+        if isinstance(phys, str):
+            phys = (phys,)
+        if len(phys) == 0:
+            out.append(None)
+        elif len(phys) == 1:
+            out.append(phys[0])
+        else:
+            out.append(tuple(phys))
+    return P(*out)
+
+
+def param_pspecs(logical_tree, rules: dict):
+    """Tree of logical-axis tuples -> tree of PartitionSpec."""
+    return jax.tree.map(
+        lambda axes: _axes_to_spec(axes, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(cfg, rules: dict):
+    """PartitionSpecs mirroring ``transformer.cache_spec`` structurally.
+
+    Attention KV caches [B, W, K, hd] are sequence-sharded over "model";
+    recurrent/mLSTM/sLSTM states shard their channel dim over "model".
+    """
+    from repro.configs import base as cfgbase
+
+    batch = rules.get("cache_batch", rules["batch"])
+    b = batch if len(batch) > 1 else (batch[0] if batch else None)
+    kv = rules["kv_seq"][0] if rules["kv_seq"] else None
+    ch = "model"
+
+    def block_specs(kind, lead):
+        if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE, cfgbase.LOCAL_ATTN):
+            s = P(*lead, b, kv, None, None)
+            return {"k": s, "v": s}
+        if kind == cfgbase.RECURRENT:
+            return {"h": P(*lead, b, ch), "conv": P(*lead, b, None, ch)}
+        if kind == cfgbase.MLSTM:
+            return {"state": (P(*lead, b, None, None, None),  # C [B,H,mhd,mhd]
+                              P(*lead, b, None, None),         # n [B,H,mhd]
+                              P(*lead, b, None)),               # m [B,H]
+                    "conv": P(*lead, b, None, None)}
+        if kind == cfgbase.SLSTM:
+            s = P(*lead, b, None)        # replicated channels (see rules)
+            return {"state": (s, s, s, s)}
+        raise ValueError(kind)
+
+    out = {"scan": {}}
+    for i, kind in enumerate(cfg.pattern):
+        out["scan"][f"sub{i}"] = block_specs(kind, (None,))
+    for j, kind in enumerate(cfg.tail_kinds):
+        out[f"tail{j}"] = block_specs(kind, ())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch / IO shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg, rules: dict, phase: str):
+    batch = rules["batch"]
+    b = batch if len(batch) != 1 else (batch[0] if batch else None)
+    if not batch:
+        b = None
+    specs = {"positions": P(b, None)}
+    if cfg.modality == "audio_frames":
+        specs["frames"] = P(b, None, None)
+    else:
+        specs["tokens"] = P(b, None)
+    if phase == "train":
+        specs["labels"] = P(b, None)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context (used inside model code via current_rules())
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield
+    finally:
+        _tls.rules = prev
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axes, no-op outside a rules ctx."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = _axes_to_spec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, spec)

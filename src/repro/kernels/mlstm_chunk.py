@@ -1,0 +1,112 @@
+"""Pallas TPU chunkwise mLSTM: matrix-memory recurrence, one chunk per step.
+
+Grid (B, H, nc): nc innermost/arbitrary; the (C [hd,hd], n [hd], m [1])
+state persists in VMEM scratch across chunks. Each step does the
+attention-like intra-chunk matmuls (MXU) + the inter-chunk state update —
+the TPU-native replacement for the xLSTM CUDA step kernel (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, ig_ref, fg_ref, h_ref,
+            c_scr, n_scr, m_scr, *, L: int, nc: int, scale: float):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # [L, hd]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    ig = ig_ref[0, 0].astype(jnp.float32)              # [L, 1]
+    fg = fg_ref[0, 0].astype(jnp.float32)
+    C = c_scr[...]
+    n = n_scr[...]                                     # [1, hd]
+    m = m_scr[0, 0]
+
+    logf = jax.nn.log_sigmoid(fg)                      # [L, 1]
+    F = jnp.cumsum(logf, axis=0)                       # [L, 1]
+    FL = F[L - 1, 0]
+    # intra-chunk pair weights
+    logD = F - F.T + ig.T                              # [L(j), L(i)]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    logD = jnp.where(tri, logD, NEG_INF)
+    m_intra = jnp.max(logD, axis=1, keepdims=True)     # [L, 1]
+    m_inter = F + m
+    mj = jnp.maximum(m_inter, m_intra)
+    d = jnp.exp(logD - mj)
+    inter = jnp.exp(m_inter - mj)                      # [L, 1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    w = s * d
+    h_intra = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h_inter = jax.lax.dot_general(q, C, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h_num = h_inter * inter + h_intra
+    n_j = inter * n + jax.lax.dot_general(d, k, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32)
+    denom = jnp.maximum(jnp.abs(jnp.sum(q * n_j, axis=1, keepdims=True)),
+                        jnp.exp(-mj))
+    h_ref[0, 0] = (h_num / denom).astype(h_ref.dtype)
+
+    # ---- state to end of chunk ------------------------------------------
+    m_next = jnp.maximum(FL + m, jnp.max(FL - F + ig))
+    sc = jnp.exp(FL - F + ig - m_next)                 # [L, 1]
+    decay = jnp.exp(FL + m - m_next)
+    c_scr[...] = C * decay + jax.lax.dot_general(
+        k * sc, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    n_scr[...] = n * decay + jnp.sum(k * sc, axis=0, keepdims=True)
+    m_scr[0, 0] = m_next
+
+
+def mlstm_chunk(q, k, v, ig, fg, *, chunk: int = 128, interpret: bool = True):
+    """Chunkwise mLSTM. q,k,v [B,S,H,hd]; ig,fg [B,S,H]. Returns h [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    L = min(chunk, S)
+    Sp = -(-S // L) * L
+    if Sp != S:
+        pad4 = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(x, pad4) for x in (q, k, v))
+        ig = jnp.pad(ig, ((0, 0), (0, Sp - S), (0, 0)), constant_values=-1e30)
+        fg = jnp.pad(fg, ((0, 0), (0, Sp - S), (0, 0)), constant_values=30.0)
+    nc = Sp // L
+    # layouts: [B, H, S, hd] and [B, H, S, 1]
+    qt, kt, vt = (jnp.moveaxis(x, 2, 1) for x in (q, k, v))
+    igt = jnp.moveaxis(ig, 2, 1)[..., None]
+    fgt = jnp.moveaxis(fg, 2, 1)[..., None]
+
+    h = pl.pallas_call(
+        functools.partial(_kernel, L=L, nc=nc, scale=hd ** -0.5),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, L, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, L, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda b, h, ci: (b, h, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, hd), lambda b, h, ci: (b, h, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, igt, fgt)
+    return jnp.moveaxis(h, 1, 2)[:, :S]

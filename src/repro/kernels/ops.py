@@ -1,0 +1,49 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True in this CPU container (the kernels execute via
+the Pallas interpreter for validation); on real TPU pass interpret=False —
+`ModelConfig.use_pallas` routes the model layer here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mlstm_chunk as _mc
+from repro.kernels import rglru_scan as _rg
+
+flash_attention = functools.partial(_fa.flash_attention)
+decode_attention = functools.partial(_da.decode_attention)
+rglru_scan = functools.partial(_rg.rglru_scan)
+mlstm_chunk = functools.partial(_mc.mlstm_chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention_jit(q, k, v, *, window=None, block_q=128, block_kv=128,
+                        interpret=True):
+    return _fa.flash_attention(q, k, v, window=window, block_q=block_q,
+                               block_kv=block_kv, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("q_per_kv", "window", "block_w",
+                                             "interpret"))
+def decode_attention_jit(q, k_cache, v_cache, cache_len, *, q_per_kv,
+                         window=None, block_w=256, interpret=True):
+    return _da.decode_attention(q, k_cache, v_cache, cache_len,
+                                q_per_kv=q_per_kv, window=window,
+                                block_w=block_w, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret"))
+def rglru_scan_jit(a, bx, *, block_t=128, block_r=128, interpret=True):
+    return _rg.rglru_scan(a, bx, block_t=block_t, block_r=block_r,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk_jit(q, k, v, ig, fg, *, chunk=128, interpret=True):
+    return _mc.mlstm_chunk(q, k, v, ig, fg, chunk=chunk, interpret=interpret)

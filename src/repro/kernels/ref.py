@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are intentionally naive — full score matrices, step-by-step recurrences
+— so the kernels (and the blocked XLA paths in models/) can be asserted
+against simple, obviously-correct math.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              q_positions=None):
+    """Naive full attention. q,k,v: [B,S,H,hd] / [B,T,H,hd]."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    q_pos = (jnp.arange(S) if q_positions is None else q_positions).astype(jnp.int32)
+    k_pos = jnp.arange(T)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, q_per_kv: int,
+                     window: Optional[int] = None):
+    """Naive single-token GQA decode over a ring cache. q [B,1,H,hd]."""
+    B, W, K, hd = k_cache.shape
+    H = q.shape[2]
+    qg = q.reshape(B, K, q_per_kv, hd)
+    s = jnp.einsum("bkgh,bwkh->bkgw", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    pos = jnp.arange(W)
+    clen = jnp.asarray(cache_len)
+    if clen.ndim == 0:
+        clen = clen[None]
+    n_valid = jnp.minimum(clen + 1, W)
+    valid = pos[None, :] < n_valid[:, None]
+    if window is not None:
+        age = (clen % W)[:, None] - pos[None, :]
+        age = jnp.where(age < 0, age + W, age)
+        valid &= age < jnp.minimum(window, n_valid + 1)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkh->bkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def rglru_scan(a, bx, h0=None):
+    """Sequential linear recurrence h_t = a_t*h_{t-1} + bx_t over [B,S,R]."""
+    B, S, R = a.shape
+    h = jnp.zeros((B, R), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    out = []
+    hs = h
+    def step(h, xs):
+        a_t, b_t = xs
+        h = a_t * h + b_t
+        return h, h
+    h_last, ys = jax.lax.scan(step, h, (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+                                        jnp.moveaxis(bx.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def mlstm(q, k, v, ig, fg, state=None):
+    """Fully sequential stabilized mLSTM (one step at a time)."""
+    B, S, H, hd = q.shape
+    if state is None:
+        C = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n = jnp.zeros((B, H, hd), jnp.float32)
+        m = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C, n, m = state
+    scale = hd ** -0.5
+    outs = []
+    for t in range(S):
+        qt = q[:, t].astype(jnp.float32) * scale
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(fg[:, t].astype(jnp.float32))
+        it = ig[:, t].astype(jnp.float32)
+        m_new = jnp.maximum(logf + m, it)
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(it - m_new)
+        C = C * fp[..., None, None] + ip[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = n * fp[..., None] + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.sum(qt * n, axis=-1)), jnp.exp(-m_new))
+        outs.append((num / den[..., None]).astype(q.dtype))
+        m = m_new
+    return jnp.stack(outs, axis=1), (C, n, m)

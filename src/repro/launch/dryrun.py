@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh, print memory/cost analysis, and dump roofline raw terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape train_4k [--multi-pod] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCHS, SHAPES, cell_is_active, get_arch, get_shape
+from repro.distributed import sharding as shd
+from repro.launch.input_specs import batch_specs, cache_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.models import transformer as tfm
+from repro.training.optimizer import opt_state_pspecs, opt_state_specs
+from repro.training.train_step import TrainConfig, make_train_step
+
+from repro.launch import hlo_cost
+
+
+def _mem_analysis_dict(ma) -> dict:
+    keys = ["generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes", "alias_size_in_bytes"]
+    d = {}
+    for k in keys:
+        try:
+            d[k] = int(getattr(ma, k))
+        except Exception:
+            pass
+    return d
+
+
+def build_cell(arch_name: str, shape_name: str, mesh, *, accum_steps=None,
+               weight_stationary: bool = False, expert_parallel: bool = False):
+    """Returns (fn, args_specs, in_shardings, out_shardings)."""
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    model = Model(cfg)
+    phase = shape.phase
+    shard_batch = shape.global_batch > 1
+    rules = shd.rules_for(mesh, phase, shard_batch=shard_batch,
+                          weight_stationary=weight_stationary and phase == "decode",
+                          expert_parallel=expert_parallel)
+
+    p_pspecs = shd.param_pspecs(model.param_axes(), rules)
+    p_specs = model.param_specs()
+    b_pspecs = shd.batch_pspecs(cfg, rules, phase)
+    b_specs = batch_specs(cfg, shape)
+
+    if phase == "train":
+        if accum_steps is None:
+            # microbatch so per-device activation transients fit 16GB HBM:
+            # target ~16k tokens × 2k width per microbatch per device
+            data_shards = 32 if "pod" in mesh.axis_names else 16
+            tokens_local = shape.global_batch * shape.seq_len // data_shards
+            est = tokens_local * cfg.d_model / (16384 * 2048)
+            accum_steps = 1
+            max_accum = shape.global_batch // data_shards
+            while accum_steps < min(max_accum, est):
+                accum_steps *= 2
+        tcfg = TrainConfig(accum_steps=accum_steps)
+        step = make_train_step(cfg, tcfg)
+        o_specs = opt_state_specs(p_specs)
+        o_pspecs = opt_state_pspecs(p_pspecs)
+
+        def fn(params, opt_state, batch):
+            with shd.use_rules(rules):
+                return step(params, opt_state, batch)
+
+        args = (p_specs, o_specs, b_specs)
+        in_sh = (p_pspecs, o_pspecs, b_pspecs)
+        out_sh = (p_pspecs, o_pspecs, None)
+        return fn, args, in_sh, out_sh, cfg, shape
+
+    c_specs = cache_specs(cfg, shape)
+    c_pspecs = shd.cache_pspecs(cfg, rules)
+    if phase == "prefill":
+        def fn(params, batch, cache):
+            with shd.use_rules(rules):
+                return tfm.prefill(params, batch, cfg, cache)
+        args = (p_specs, b_specs, c_specs)
+        in_sh = (p_pspecs, b_pspecs, c_pspecs)
+        out_sh = (None, c_pspecs)
+        return fn, args, in_sh, out_sh, cfg, shape
+
+    def fn(params, batch, cache, cache_len):
+        with shd.use_rules(rules):
+            return tfm.decode_step(params, batch, cfg, cache, cache_len)
+    args = (p_specs, b_specs, c_specs, jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (p_pspecs, b_pspecs, c_pspecs, P())
+    out_sh = (None, c_pspecs)
+    return fn, args, in_sh, out_sh, cfg, shape
+
+
+def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+                verbose: bool = True, accum_steps=None,
+                weight_stationary: bool = False,
+                expert_parallel: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, cfg, shape = build_cell(
+        arch_name, shape_name, mesh, accum_steps=accum_steps,
+        weight_stationary=weight_stationary, expert_parallel=expert_parallel)
+
+    def to_named(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=to_named(in_sh),
+                         out_shardings=to_named(out_sh))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    cost = hlo_cost.analyze(hlo)      # trip-count-aware (see hlo_cost.py)
+    # persist the compiled HLO so the roofline can be re-derived without
+    # recompiling (zstd: ~2MB text -> ~100KB)
+    try:
+        import zstandard
+        os.makedirs("results/hlo", exist_ok=True)
+        tag = f"{arch_name}_{shape_name}_{'mp' if multi_pod else 'sp'}"
+        with open(f"results/hlo/{tag}.hlo.zst", "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(hlo.encode()))
+    except Exception:
+        pass
+    res = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "phase": shape.phase,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": _mem_analysis_dict(ma),
+        "xla_flops_once": float(ca.get("flops", -1)),   # raw (whiles counted once)
+        "flops": cost.flops,                             # per-device, trip-aware
+        "bytes_accessed": cost.bytes_accessed,
+        "bytes_min": cost.bytes_min,
+        "collectives": {"total_bytes": cost.collective_bytes,
+                        "bytes": cost.collective_bytes_by_op,
+                        "counts": cost.collective_counts},
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "hlo_lines": hlo.count("\n"),
+    }
+    if verbose:
+        dev = res["devices"]
+        mem = res["memory"]
+        print(f"[dryrun] {arch_name} × {shape_name} on {res['mesh']}: "
+              f"compile={t_compile:.0f}s flops/dev={res['flops']:.3e} "
+              f"bytes/dev={res['bytes_accessed']:.3e} "
+              f"coll/dev={cost.collective_bytes:.3e}B "
+              f"arg={mem.get('argument_size_in_bytes', 0)/1e9:.2f}GB/dev "
+              f"temp={mem.get('temp_size_in_bytes', 0)/1e9:.2f}GB/dev", flush=True)
+        print(f"  memory_analysis: {mem}", flush=True)
+        print(f"  collectives: {res['collectives']}", flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--accum-steps", type=int, default=None)
+    ap.add_argument("--weight-stationary", action="store_true")
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for cfg in ARCHS.values():
+            for shape in SHAPES.values():
+                active, why = cell_is_active(cfg, shape)
+                if active:
+                    cells.append((cfg.name, shape.name))
+                else:
+                    print(f"[skip] {cfg.name} × {shape.name}: {why}")
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    results, failures = [], []
+    for arch, shape in cells:
+        try:
+            results.append(dryrun_cell(arch, shape, multi_pod=args.multi_pod,
+                                       accum_steps=args.accum_steps,
+                                       weight_stationary=args.weight_stationary,
+                                       expert_parallel=args.expert_parallel))
+        except Exception as e:  # noqa: BLE001 — record and continue the sweep
+            traceback.print_exc()
+            failures.append({"arch": arch, "shape": shape, "error": repr(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"[dryrun] done: {len(results)} ok, {len(failures)} failed")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

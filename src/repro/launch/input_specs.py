@@ -1,0 +1,45 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation — the same pattern shannon/kernels uses: weak-type
+correct, shardable, consumed by ``jax.jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Model-input ShapeDtypeStructs for one cell."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.phase != "decode" else 1
+    i32 = jnp.int32
+    specs = {"positions": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.modality == "audio_frames":
+        specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if shape.phase == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """KV/state cache ShapeDtypeStructs (decode/prefill phases only)."""
+    if shape.phase == "train":
+        return None
+    return tfm.cache_spec(cfg, shape.global_batch, shape.seq_len)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Full argument spec set for the cell's entry point."""
+    out = {"batch": batch_specs(cfg, shape)}
+    cache = cache_specs(cfg, shape)
+    if cache is not None:
+        out["cache"] = cache
+    if shape.phase == "decode":
+        out["cache_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (jax locks the device count on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (one v5e pod slice, 256 chips) or 2×16×16 (two pods, 512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh over the real local device (CPU tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link

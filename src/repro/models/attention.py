@@ -1,0 +1,224 @@
+"""GQA attention: blocked (flash-style) XLA path + decode path + param defs.
+
+The full/train/prefill path never materializes the [S, T] score matrix: it
+scans q-blocks and kv-blocks with online-softmax accumulators (the same
+algorithm the Pallas kernel implements on TPU; `kernels/flash_attention.py`
+is the hardware path, this is the XLA path the dry-run lowers).
+
+Decode attends a single new token against a (possibly ring-buffered) KV cache.
+The distributed variant — KV cache sequence-sharded over the `model` axis with
+a log-sum-exp psum combine — lives in `repro.distributed.collectives`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import (ParamDef, apply_norm, mlp_defs, norm_defs,
+                                 rms_norm_headwise, rotary_embed)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg):
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    d = {
+        "norm": norm_defs(cfg),
+        "wq": ParamDef((D, H, hd), ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wv": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "embed"), init="scaled"),
+    }
+    if cfg.attn_bias:
+        d["bq"] = ParamDef((H, hd), ("heads", "head_dim"), init="zeros")
+        d["bk"] = ParamDef((K, hd), ("kv_heads", "head_dim"), init="zeros")
+        d["bv"] = ParamDef((K, hd), ("kv_heads", "head_dim"), init="zeros")
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+
+def qkv_proj(p, x, cfg, positions):
+    """x [B,S,D] -> q [B,S,H,hd], k,v [B,S,K,hd] with rope/qk-norm applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q, k = rms_norm_headwise(q), rms_norm_headwise(k)
+    if cfg.pos_emb == "rope":
+        q = rotary_embed(q, positions, cfg.rope_theta, cfg.rotary_pct)
+        k = rotary_embed(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def out_proj(p, o):
+    o = constrain(o, "batch", None, "heads", None)
+    return constrain(jnp.einsum("bshk,hkd->bsd", o, p["wo"]), "batch", None, None)
+
+
+def repeat_kv(k, q_per_kv: int):
+    """[B,S,K,hd] -> [B,S,K*G,hd] by repeating each KV head G times."""
+    if q_per_kv == 1:
+        return k
+    B, S, K, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, K, q_per_kv, hd))
+    return constrain(k.reshape(B, S, K * q_per_kv, hd), "batch", None, "heads", None)
+
+
+# ---------------------------------------------------------------------------
+# Blocked full attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_mask(q_pos, k_pos, window: Optional[int]):
+    """[bq, bkv] bool mask: causal + optional sliding/local window."""
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def flash_attention(q, k, v, *, window: Optional[int] = None,
+                    block_q: int = 512, block_kv: int = 512,
+                    q_positions=None):
+    """Causal flash attention, pure-XLA. q,k,v: [B, S(T), H, hd] (KV repeated).
+
+    ``q_positions``: int32 [S] *runtime* positions of the q rows (k rows are
+    positions 0..T-1). Being a runtime input keeps the per-block masks inside
+    the scan bodies — if they were trace-time constants XLA's LICM would hoist
+    and materialize all (q-block × kv-block) masks as a giant temp.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.arange(S, dtype=jnp.int32)
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    # pad S/T to block multiples
+    Sp = -(-S // block_q) * block_q
+    Tp = -(-T // block_kv) * block_kv
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    posp = jnp.pad(q_positions.astype(jnp.int32), (0, Sp - S),
+                   constant_values=-(2 ** 30))
+    nq, nk = Sp // block_q, Tp // block_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    # [nq, B, bq, H, hd] / [nk, B, bkv, H, hd]
+    qb = jnp.moveaxis(qp.reshape(B, nq, block_q, H, hd), 1, 0)
+    kb = jnp.moveaxis(kp.reshape(B, nk, block_kv, H, hd), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nk, block_kv, H, hd), 1, 0)
+    pb = posp.reshape(nq, block_q)
+
+    def q_step(_, qi_blk):
+        q_pos, q_blk = qi_blk                                  # [bq] runtime
+
+        def kv_step(carry, kj_blk):
+            m_prev, l_prev, o_prev = carry
+            kj, k_blk, v_blk = kj_blk
+            k_pos = kj * block_kv + jnp.arange(block_kv)
+            s = jnp.einsum("bqhk,bvhk->bhqv", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q_pos, k_pos, window)
+            if Tp != T:
+                mask &= (k_pos < T)[None, :]
+            s = s + jnp.where(mask, 0.0, NEG_INF)              # [bq,bkv] bias
+            m_cur = jnp.max(s, axis=-1)                       # [B,H,bq]
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            o_new = o_prev * corr[..., None] + jnp.einsum(
+                "bhqv,bvhk->bhqk", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        init = (jnp.full((B, H, block_q), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, block_q), jnp.float32),
+                jnp.zeros((B, H, block_q, hd), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(kv_step, init,
+                                    (jnp.arange(nk), kb, vb))
+        o = o / jnp.maximum(l, 1e-30)[..., None]               # [B,H,bq,hd]
+        return None, jnp.moveaxis(o, 1, 2)                     # -> [B,bq,H,hd]
+
+    _, ob = jax.lax.scan(q_step, None, (pb, qb))               # [nq,B,bq,H,hd]
+    out = jnp.moveaxis(ob, 0, 1).reshape(B, Sp, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single-device semantics; sharded version in distributed/)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, q_per_kv: int,
+                     window: Optional[int] = None):
+    """q [B,1,H,hd] against cache [B,W,K,hd]; valid positions < cache_len+1.
+
+    The new token's K/V must already be written into the cache (at slot
+    ``cache_len % W``). GQA is computed grouped — no KV repetition.
+    """
+    B, W, K, hd = k_cache.shape
+    H = q.shape[2]
+    G = q_per_kv
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bwkh->bkgw", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    pos = jnp.arange(W)
+    clen = jnp.asarray(cache_len)
+    if clen.ndim == 0:
+        clen = clen[None]                              # -> [1] or [B]
+    n_valid = jnp.minimum(clen + 1, W)                 # [1|B]
+    valid = pos[None, :] < n_valid[:, None]            # [1|B, W]
+    if window is not None:
+        # slots older than `window` positions are invalid (ring overwrite makes
+        # this automatic when W == window; keep mask for W > window)
+        age = (clen % jnp.maximum(W, 1))[:, None] - pos[None, :]
+        age = jnp.where(age < 0, age + W, age)
+        valid &= age < jnp.minimum(window, n_valid + 1)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkh->bkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cache_update(k_cache, v_cache, k_new, v_new, cache_len):
+    """Write k_new/v_new [B,1,K,hd] at ring slot cache_len % W.
+
+    ``cache_len`` scalar → uniform dynamic-update-slice (the dry-run/train
+    path, friendly to sequence-sharded caches); vector [B] → per-row scatter
+    (continuous batching: every slot has its own length).
+    """
+    W = k_cache.shape[1]
+    clen = jnp.asarray(cache_len)
+    if clen.ndim == 0:
+        slot = clen % W
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+        return k_cache, v_cache
+    rows = jnp.arange(k_cache.shape[0])
+    slot = clen % W
+    k_cache = k_cache.at[rows, slot].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[rows, slot].set(v_new[:, 0].astype(v_cache.dtype))
+    return k_cache, v_cache

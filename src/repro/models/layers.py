@@ -1,0 +1,214 @@
+"""Parameter definitions and basic layers (norms, MLP, rotary, positions).
+
+Single source of truth: each parameter is a ``ParamDef(shape, axes, init)``;
+``init_params`` / ``param_specs`` / ``logical_axes`` all derive from the same
+def-tree, so shapes and shardings can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# ParamDef machinery
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis names, len == ndim
+    init: str = "normal"                      # normal | zeros | ones | scaled
+    scale: float = 0.02
+    dtype: Optional[str] = None               # override param dtype (e.g. f32 states)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_one(d: ParamDef, key, dtype) -> jax.Array:
+    dt = jnp.dtype(d.dtype or dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "scaled":  # fan-in scaled normal
+        fan_in = d.shape[0] if len(d.shape) == 1 else math.prod(d.shape[:-1])
+        return (jax.random.normal(key, d.shape, jnp.float32) / math.sqrt(max(fan_in, 1))).astype(dt)
+    return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(dt)
+
+
+def init_params(defs, key, dtype="bfloat16"):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_specs(defs, dtype="bfloat16"):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or dtype)),
+        defs, is_leaf=is_def)
+
+
+def logical_axes(defs):
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacking (scan) dimension to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init, d.scale, d.dtype),
+        defs, is_leaf=is_def)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_defs(cfg, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    d = {"scale": ParamDef((dim,), ("norm",), init="ones")}
+    if cfg.norm_type == "layernorm":
+        d["bias"] = ParamDef((dim,), ("norm",), init="zeros")
+    return d
+
+
+def apply_norm(p, x, cfg, eps: Optional[float] = None):
+    eps = eps or cfg.norm_eps
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(x, eps=1e-6):
+    """Per-head RMS norm (chameleon qk-norm), no learned scale."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    d = {
+        "wi": ParamDef((D, F), ("embed", "mlp"), init="scaled"),
+        "wo": ParamDef((F, D), ("mlp", "embed"), init="scaled"),
+    }
+    if cfg.gated_mlp:
+        d["wg"] = ParamDef((D, F), ("embed", "mlp"), init="scaled")
+    if cfg.mlp_bias:
+        d["bi"] = ParamDef((F,), ("mlp",), init="zeros")
+        d["bo"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+    return d
+
+
+def activation(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def apply_mlp(p, x, cfg):
+    pet = jnp.bfloat16 if getattr(cfg, "bf16_reduce", False) else None
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"], preferred_element_type=pet)
+    if cfg.mlp_bias:
+        h = h + p["bi"]
+    if cfg.gated_mlp:
+        h = activation(h, cfg.act) * jnp.einsum("bsd,df->bsf", x, p["wg"])
+    else:
+        h = activation(h, cfg.act)
+    h = constrain(h, "batch", None, "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"], preferred_element_type=pet)
+    if cfg.mlp_bias:
+        y = y + p["bo"]
+    return constrain(y, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Positions: rotary + sinusoidal
+# ---------------------------------------------------------------------------
+
+
+def rotary_embed(x, positions, theta: float, rotary_pct: float = 1.0):
+    """Apply RoPE to ``x[..., S, H, hd]`` given ``positions [B, S]``.
+
+    ``rotary_pct < 1`` rotates only the leading fraction of the head dim
+    (ChatGLM-style 2d rope); the remainder passes through untouched.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * rotary_pct)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # [B, S, half]
+    cos = jnp.cos(ang)[..., None, :]                                 # [B, S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_pos(positions, d_model: int, dtype):
+    """Classic transformer sinusoidal positional encoding, [B, S, D]."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg):
+    d = {"embed": {"table": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"))}}
+    if not cfg.tie_embeddings:
+        d["unembed"] = {"table": ParamDef((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), init="scaled")}
+    return d
+
+
+def embed_tokens(params, tokens, cfg):
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    if cfg.name.startswith("gemma") or cfg.family == "hybrid":
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)  # gemma-family scaling
+    return x
+
+
+def unembed(params, x, cfg):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"]["table"],
+                            preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return constrain(logits, "batch", None, "vocab")

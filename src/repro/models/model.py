@@ -1,0 +1,64 @@
+"""Thin façade over the functional model: init / specs / axes / entry points."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import init_params, logical_axes, param_specs
+
+
+class Model:
+    """Stateless model handle for one ModelConfig."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.defs = tfm.model_defs(cfg)
+
+    # ---- params ------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        return init_params(self.defs, key, self.cfg.param_dtype)
+
+    def param_specs(self):
+        return param_specs(self.defs, self.cfg.param_dtype)
+
+    def param_axes(self):
+        return logical_axes(self.defs)
+
+    def param_count(self) -> int:
+        return sum(int(jnp.size(jnp.zeros(s.shape, jnp.int8)) * 0 + 1) *
+                   int(functools.reduce(lambda a, b: a * b, s.shape, 1))
+                   for s in jax.tree.leaves(self.param_specs()))
+
+    # ---- caches ------------------------------------------------------------
+    def cache_spec(self, batch: int, capacity: int):
+        return tfm.cache_spec(self.cfg, batch, capacity)
+
+    def init_cache(self, batch: int, capacity: int):
+        return tfm.init_cache(self.cfg, batch, capacity)
+
+    # ---- entry points --------------------------------------------------------
+    def loss(self, params, batch):
+        return tfm.train_loss(params, batch, self.cfg)
+
+    def prefill(self, params, batch, cache, **kw):
+        return tfm.prefill(params, batch, self.cfg, cache, **kw)
+
+    def decode_step(self, params, batch, cache, cache_len, **kw):
+        return tfm.decode_step(params, batch, self.cfg, cache, cache_len, **kw)
+
+    # ---- input construction ------------------------------------------------
+    def make_batch(self, tokens_or_frames, *, labels=None, positions=None, start=0):
+        cfg = self.cfg
+        key = "frames" if cfg.modality == "audio_frames" else "tokens"
+        arr = tokens_or_frames
+        B, S = arr.shape[0], arr.shape[1]
+        if positions is None:
+            positions = jnp.broadcast_to(start + jnp.arange(S)[None, :], (B, S))
+        batch = {key: arr, "positions": positions}
+        if labels is not None:
+            batch["labels"] = labels
+        return batch

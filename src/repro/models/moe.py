@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing, einsum dispatch.
+
+TPU adaptation (see DESIGN.md §3): dense Mesh-TF-style dispatch with a capacity
+factor — static shapes, MXU-aligned einsums, no sorting / dynamic gather.
+Tokens are processed in groups of ``cfg.moe_group_size`` so the one-hot
+dispatch tensor stays bounded: [N, G, E, C] with C = ceil(G*k/E * cf).
+
+Router aux losses (load-balancing + z-loss) are returned for the train loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import ParamDef, activation
+
+
+def moe_defs(cfg):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    d = {
+        "router": ParamDef((D, E), ("embed", None), init="scaled"),
+        "wi": ParamDef((E, D, F), ("experts", "moe_embed", "mlp"), init="scaled"),
+        "wo": ParamDef((E, F, D), ("experts", "mlp", "moe_embed"), init="scaled"),
+    }
+    if cfg.gated_mlp:
+        d["wg"] = ParamDef((E, D, F), ("experts", "moe_embed", "mlp"), init="scaled")
+    return d
+
+
+def capacity(cfg, group: int) -> int:
+    c = int(group * cfg.experts_per_token / cfg.num_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for lane alignment
+
+
+def route(router_w, x, cfg):
+    """x [N,G,D] -> dispatch [N,G,E,C] bf16, combine [N,G,E,C] f32, aux losses."""
+    E, k = cfg.num_experts, cfg.experts_per_token
+    G = x.shape[1]
+    C = capacity(cfg, G)
+    logits = jnp.einsum("ngd,de->nge", x, router_w,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- aux losses ------------------------------------------------------
+    # load balance: mean prob per expert vs fraction of tokens routed there
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_routed = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=(0, 1))
+    frac_prob = jnp.mean(probs, axis=(0, 1))
+    aux_loss = cfg.aux_loss_weight * E * jnp.sum(frac_routed * frac_prob)
+    z_loss = cfg.router_z_loss * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # --- top-k dispatch with capacity -------------------------------------
+    dispatch = jnp.zeros((x.shape[0], G, E, C), jnp.bfloat16)
+    combine = jnp.zeros((x.shape[0], G, E, C), jnp.float32)
+    p_rem = probs
+    prev_count = jnp.zeros((x.shape[0], 1, E), jnp.int32)
+    gate_sum = jnp.zeros(probs.shape[:2] + (1,), jnp.float32)
+    onehots = []
+    for _ in range(k):
+        choice = jnp.argmax(p_rem, axis=-1)                     # [N,G]
+        oh = jax.nn.one_hot(choice, E, dtype=jnp.float32)        # [N,G,E]
+        gate = jnp.sum(p_rem * oh, axis=-1, keepdims=True)       # [N,G,1]
+        pos = jnp.cumsum(oh, axis=1) - oh + prev_count           # slot within expert
+        keep = (pos < C) * oh                                    # [N,G,E]
+        slot = jnp.sum(pos * oh, axis=-1).astype(jnp.int32)      # [N,G]
+        slot_oh = jax.nn.one_hot(jnp.clip(slot, 0, C - 1), C, dtype=jnp.float32)
+        d = keep[..., None] * slot_oh[:, :, None, :]             # [N,G,E,C]
+        dispatch = dispatch + d.astype(jnp.bfloat16)
+        combine = combine + d * gate[..., None]
+        gate_sum = gate_sum + gate * jnp.sum(keep, axis=-1, keepdims=True)
+        prev_count = prev_count + jnp.sum(oh, axis=1, keepdims=True).astype(jnp.int32)
+        p_rem = p_rem * (1.0 - oh)
+        onehots.append(oh)
+    combine = combine / jnp.maximum(gate_sum[..., None], 1e-9)   # renormalize top-k
+    return dispatch, combine.astype(jnp.bfloat16), aux_loss + z_loss
+
+
+def apply_moe(p, x, cfg):
+    """x [B,S,D] -> [B,S,D], aux_loss scalar."""
+    B, S, D = x.shape
+    T = B * S
+    G = min(cfg.moe_group_size, T)
+    Tp = -(-T // G) * G                       # pad to a group multiple
+    xf = x.reshape(T, D)
+    if Tp != T:
+        xf = jnp.pad(xf, ((0, Tp - T), (0, 0)))
+    N = Tp // G
+    xg = constrain(xf.reshape(N, G, D), "batch", None, None)
+    dispatch, combine, aux = route(p["router"], xg, cfg)
+    dispatch = constrain(dispatch, "batch", None, None, None)
+    xe = jnp.einsum("ngec,ngd->necd", dispatch, xg.astype(jnp.bfloat16))
+    # Expert parallelism (§Perf): compute the dispatch batch-sharded, THEN
+    # reshard the group axis -> expert axis. The two-step constraint makes
+    # the partitioner emit an activation-sized all-to-all instead of
+    # gathering tokens (or expert weights) — the DeepSpeed-MoE/Switch layout.
+    xe = constrain(xe, "batch", None, None, None)
+    xe = constrain(xe, "moe_tokens", "experts_run", None, None)
+    pet = jnp.bfloat16 if cfg.bf16_reduce else None
+    h = jnp.einsum("necd,edf->necf", xe, p["wi"], preferred_element_type=pet)
+    if cfg.gated_mlp:
+        h = activation(h, cfg.act) * jnp.einsum("necd,edf->necf", xe, p["wg"],
+                                                preferred_element_type=pet)
+    else:
+        h = activation(h, cfg.act)
+    h = constrain(h, "moe_tokens", "experts_run", None, "mlp")
+    ye = jnp.einsum("necf,efd->necd", h, p["wo"], preferred_element_type=pet)
+    ye = constrain(ye, "moe_tokens", "experts_run", None, None)
+    ye = constrain(ye, "batch", None, None, None)
+    y = jnp.einsum("necd,ngec->ngd", ye, combine)
+    y = y.reshape(Tp, D)[:T]
+    return constrain(y.reshape(B, S, D).astype(x.dtype), "batch", None, None), aux

@@ -1,0 +1,111 @@
+"""Griffin / RecurrentGemma recurrent block: conv1d + RG-LRU temporal mixing.
+
+RG-LRU recurrence (diagonal, real):
+    r_t = sigmoid(w_r * x_t + b_r)          (recurrence gate)
+    i_t = sigmoid(w_i * x_t + b_i)          (input gate)
+    a_t = exp(c * softplus(Lambda) * (-r_t))  in log space, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: train/prefill uses ``jax.lax.associative_scan`` over the
+linear recurrence (parallel depth log S) — the Pallas kernel
+(`kernels/rglru_scan.py`) implements the time-blocked sequential variant for
+deployment. Gates are diagonal (per-channel), matching the block-diagonal
+spirit of the published model at equal parameter count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, norm_defs
+
+C_RGLRU = 8.0
+
+
+def rglru_defs(cfg):
+    D = cfg.d_model
+    R = cfg.rglru_dim or D
+    W = cfg.conv1d_width
+    return {
+        "norm": norm_defs(cfg),
+        "wx": ParamDef((D, R), ("embed", "rnn"), init="scaled"),
+        "wy": ParamDef((D, R), ("embed", "rnn"), init="scaled"),   # gate branch
+        "conv_w": ParamDef((W, R), ("conv", "rnn"), init="scaled"),
+        "conv_b": ParamDef((R,), ("rnn",), init="zeros"),
+        "w_rgate": ParamDef((R,), ("rnn",), init="normal"),
+        "b_rgate": ParamDef((R,), ("rnn",), init="zeros"),
+        "w_igate": ParamDef((R,), ("rnn",), init="normal"),
+        "b_igate": ParamDef((R,), ("rnn",), init="zeros"),
+        "a_param": ParamDef((R,), ("rnn",), init="normal"),        # Lambda
+        "wo": ParamDef((R, D), ("rnn", "embed"), init="scaled"),
+    }
+
+
+def causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv. x [B,S,R], w [W,R]; state [B,W-1,R] or None.
+
+    Returns (y [B,S,R], new_state [B,W-1,R]).
+    """
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xs = jnp.concatenate([state, x], axis=1)          # [B, S+W-1, R]
+    y = sum(xs[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xs[:, -(W - 1):] if W > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+def _gates(p, x):
+    """log a_t [.., R] (f32) and gated input beta*i*x (f32)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["w_rgate"].astype(jnp.float32) + p["b_rgate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf * p["w_igate"].astype(jnp.float32) + p["b_igate"].astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * xf
+
+
+def rglru_scan(p, x, h0=None):
+    """Linear recurrence over [B,S,R] via associative scan. Returns (y, h_S)."""
+    a, bx = _gates(p, x)                       # [B,S,R] f32
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def op(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, ar * bl + br
+
+    aa, hh = jax.lax.associative_scan(op, (a, bx), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(p, x, h):
+    """Single decode step. x [B,1,R], h [B,R] f32 -> (y [B,1,R], h')."""
+    a, bx = _gates(p, x[:, 0])
+    h_new = a * h.astype(jnp.float32) + bx
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full"):
+    """Full Griffin temporal-mixing branch (pre-norm handled by caller).
+
+    x [B,S,D] -> (y [B,S,D], new_cache) with cache {"h": [B,R] f32,
+    "conv": [B,W-1,R]}.
+    """
+    u = jnp.einsum("bsd,dr->bsr", x, p["wx"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["wy"]))
+    if mode == "decode":
+        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], cache["conv"])
+        y, h = rglru_step(p, c, cache["h"])
+    elif cfg.use_pallas:
+        from repro.kernels import rglru_scan as _krg
+        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"])
+        a, bx = _gates(p, c)
+        y, h = _krg.rglru_scan(a.astype(c.dtype), bx.astype(c.dtype))
+        y = y.astype(c.dtype)
+    else:
+        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"])
+        y, h = rglru_scan(p, c)
+    out = jnp.einsum("bsr,rd->bsd", y * gate, p["wo"])
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,333 @@
+"""Block assembly + scan-over-layers stack + train/prefill/decode entry points.
+
+The layer stack is ``cfg.pattern`` repeated ``cfg.num_scan_groups`` times (a
+single ``lax.scan`` over stacked params — O(1) HLO size in depth) plus an
+explicit tail for patterns that don't divide ``num_layers`` (recurrentgemma:
+38 = 12×(R,R,A) + (R,R)).
+
+Caches mirror the param structure: ``{"scan": {"sub<i>": stacked}, "tail<j>":
+...}`` plus a scalar ``cache_len`` carried by the caller.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (apply_mlp, apply_norm, embed_defs,
+                                 embed_tokens, init_params, logical_axes,
+                                 mlp_defs, norm_defs, param_specs,
+                                 sinusoidal_pos, stack_defs, unembed)
+
+# ---------------------------------------------------------------------------
+# Per-block param defs
+# ---------------------------------------------------------------------------
+
+
+def block_defs(kind: str, cfg):
+    if kind in (cfgbase.ATTN, cfgbase.LOCAL_ATTN):
+        return {"attn": attn.attn_defs(cfg), "norm2": norm_defs(cfg), "mlp": mlp_defs(cfg)}
+    if kind == cfgbase.ATTN_MOE:
+        return {"attn": attn.attn_defs(cfg), "norm2": norm_defs(cfg), "moe": moe_mod.moe_defs(cfg)}
+    if kind == cfgbase.RECURRENT:
+        return {"rec": rglru_mod.rglru_defs(cfg), "norm2": norm_defs(cfg), "mlp": mlp_defs(cfg)}
+    if kind == cfgbase.MLSTM:
+        return {"mlstm": xlstm_mod.mlstm_defs(cfg)}
+    if kind == cfgbase.SLSTM:
+        return {"slstm": xlstm_mod.slstm_defs(cfg)}
+    raise ValueError(kind)
+
+
+def model_defs(cfg):
+    defs: Dict[str, Any] = dict(embed_defs(cfg))
+    scan = {}
+    for i, kind in enumerate(cfg.pattern):
+        scan[f"sub{i}"] = stack_defs(block_defs(kind, cfg), cfg.num_scan_groups)
+    defs["scan"] = scan
+    for j, kind in enumerate(cfg.tail_kinds):
+        defs[f"tail{j}"] = block_defs(kind, cfg)
+    defs["final_norm"] = norm_defs(cfg)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Cache defs (ShapeDtypeStructs — allocated by the serving engine / dry-run)
+# ---------------------------------------------------------------------------
+
+
+def block_cache_spec(kind: str, cfg, batch: int, capacity: int):
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    R = cfg.rglru_dim or cfg.d_model
+    F2 = int(cfg.mlstm_proj_factor * cfg.d_model)
+    W = cfg.conv1d_width
+    cdt = jnp.dtype(cfg.dtype)
+    if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE):
+        cap = capacity if cfg.sliding_window is None else min(capacity, cfg.sliding_window)
+        return {"k": jax.ShapeDtypeStruct((batch, cap, K, hd), cdt),
+                "v": jax.ShapeDtypeStruct((batch, cap, K, hd), cdt)}
+    if kind == cfgbase.LOCAL_ATTN:
+        cap = min(capacity, cfg.local_window or capacity)
+        return {"k": jax.ShapeDtypeStruct((batch, cap, K, hd), cdt),
+                "v": jax.ShapeDtypeStruct((batch, cap, K, hd), cdt)}
+    if kind == cfgbase.RECURRENT:
+        return {"h": jax.ShapeDtypeStruct((batch, R), jnp.float32),
+                "conv": jax.ShapeDtypeStruct((batch, W - 1, R), cdt)}
+    if kind == cfgbase.MLSTM:
+        H = cfg.num_heads
+        mhd = F2 // H
+        return {"state": (jax.ShapeDtypeStruct((batch, H, mhd, mhd), jnp.float32),
+                          jax.ShapeDtypeStruct((batch, H, mhd), jnp.float32),
+                          jax.ShapeDtypeStruct((batch, H), jnp.float32)),
+                "conv": jax.ShapeDtypeStruct((batch, W - 1, F2), cdt)}
+    if kind == cfgbase.SLSTM:
+        D = cfg.d_model
+        st = jax.ShapeDtypeStruct((batch, D), jnp.float32)
+        return {"state": (st, st, st, st)}
+    raise ValueError(kind)
+
+
+def _stack_spec(spec, n):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+
+def cache_spec(cfg, batch: int, capacity: int):
+    c: Dict[str, Any] = {"scan": {}}
+    for i, kind in enumerate(cfg.pattern):
+        c["scan"][f"sub{i}"] = _stack_spec(
+            block_cache_spec(kind, cfg, batch, capacity), cfg.num_scan_groups)
+    for j, kind in enumerate(cfg.tail_kinds):
+        c[f"tail{j}"] = block_cache_spec(kind, cfg, batch, capacity)
+    return c
+
+
+def init_cache(cfg, batch: int, capacity: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, capacity))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len, decode_attn_fn):
+    """Attention temporal mixer (pre-norm residual handled by caller).
+
+    ``cfg.use_pallas`` routes the hot spots to the TPU kernels
+    (repro.kernels); the default XLA path is what the dry-run lowers.
+    """
+    window = cfg.sliding_window if kind != cfgbase.LOCAL_ATTN else cfg.local_window
+    q, k, v = attn.qkv_proj(p, x, cfg, positions)
+    if mode == "decode":
+        kc, vc = attn.cache_update(cache["k"], cache["v"], k, v, cache_len)
+        if cfg.use_pallas:
+            from repro.kernels import decode_attention as _kda
+            o = _kda.decode_attention(q, kc, vc, cache_len,
+                                      q_per_kv=cfg.q_per_kv, window=window)
+        else:
+            o = decode_attn_fn(q, kc, vc, cache_len, q_per_kv=cfg.q_per_kv,
+                               window=window)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        kr = attn.repeat_kv(k, cfg.q_per_kv)
+        vr = attn.repeat_kv(v, cfg.q_per_kv)
+        if cfg.use_pallas:
+            from repro.kernels import flash_attention as _kfa
+            o = _kfa.flash_attention(q, kr, vr, window=window)
+        else:
+            o = attn.flash_attention(q, kr, vr, window=window,
+                                     q_positions=positions[0])
+        if mode == "prefill":
+            cap = cache["k"].shape[1]
+            S = k.shape[1]
+            if cap >= S:
+                kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            else:  # windowed cache: keep the last `cap` positions, ring-aligned
+                k_tail, v_tail = k[:, S - cap:], v[:, S - cap:]
+                roll = (S - cap) % cap
+                kc = jnp.roll(k_tail, shift=roll, axis=1).astype(cache["k"].dtype)
+                vc = jnp.roll(v_tail, shift=roll, axis=1).astype(cache["v"].dtype)
+            new_cache = {"k": kc, "v": vc}
+        else:
+            new_cache = cache
+    return attn.out_proj(p, o), new_cache
+
+
+def apply_block(kind, p, x, cfg, *, positions, mode, cache, cache_len, decode_attn_fn):
+    """One residual block. Returns (x', new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE, cfgbase.LOCAL_ATTN):
+        h = apply_norm(p["attn"]["norm"], x, cfg)
+        o, new_cache = _attn_mixer(p["attn"], h, cfg, kind=kind, positions=positions,
+                                   mode=mode, cache=cache, cache_len=cache_len,
+                                   decode_attn_fn=decode_attn_fn)
+        x = x + o
+        h2 = apply_norm(p["norm2"], x, cfg)
+        if kind == cfgbase.ATTN_MOE:
+            y, aux = moe_mod.apply_moe(p["moe"], h2, cfg)
+        else:
+            y = apply_mlp(p["mlp"], h2, cfg)
+        return x + y, new_cache, aux
+    if kind == cfgbase.RECURRENT:
+        h = apply_norm(p["rec"]["norm"], x, cfg)
+        o, new_cache = rglru_mod.apply_recurrent_mixer(
+            p["rec"], h, cfg, cache=cache, mode=mode if mode == "decode" else "full")
+        x = x + o
+        h2 = apply_norm(p["norm2"], x, cfg)
+        return x + apply_mlp(p["mlp"], h2, cfg), new_cache, aux
+    if kind == cfgbase.MLSTM:
+        h = apply_norm(p["mlstm"]["norm"], x, cfg)
+        o, new_cache = xlstm_mod.apply_mlstm(
+            p["mlstm"], h, cfg, cache=cache, mode=mode if mode == "decode" else "full")
+        return x + o, new_cache, aux
+    if kind == cfgbase.SLSTM:
+        h = apply_norm(p["slstm"]["norm"], x, cfg)
+        o, new_cache = xlstm_mod.apply_slstm(
+            p["slstm"], h, cfg, cache=cache, mode=mode if mode == "decode" else "full")
+        return x + o, new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# The stack
+# ---------------------------------------------------------------------------
+
+
+def _superblock(params_g, cache_g, x, cfg, *, positions, mode, cache_len, decode_attn_fn):
+    """Apply one period of the pattern. Returns (x, new_cache_g, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    x = constrain(x, "batch", None, None)
+    # Barrier: stops XLA LICM from hoisting per-layer converts of the saved
+    # residual stack out of the (backward) layers loop — that hoist would
+    # materialize an f32 copy of the whole [L, B, S, D] stack (MaxText does
+    # the same around scanned blocks).
+    x = jax.lax.optimization_barrier(x)
+    for i, kind in enumerate(cfg.pattern):
+        sub_cache = cache_g.get(f"sub{i}") if cache_g else None
+        x, nc, a = apply_block(kind, params_g[f"sub{i}"], x, cfg,
+                               positions=positions, mode=mode, cache=sub_cache,
+                               cache_len=cache_len, decode_attn_fn=decode_attn_fn)
+        new_cache[f"sub{i}"] = nc
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def apply_stack(params, x, cfg, *, positions, mode, cache=None, cache_len=None,
+                decode_attn_fn=None):
+    """Run all layers. Returns (x, new_cache, aux_loss_sum)."""
+    decode_attn_fn = decode_attn_fn or attn.decode_attention
+    use_cache = cache is not None
+    scan_cache = cache["scan"] if use_cache else None
+
+    def body(carry, xs):
+        x, aux = carry
+        params_g, cache_g = xs
+        x, new_cache_g, a = _superblock(params_g, cache_g, x, cfg,
+                                        positions=positions, mode=mode,
+                                        cache_len=cache_len,
+                                        decode_attn_fn=decode_attn_fn)
+        return (x, aux + a), new_cache_g
+
+    if cfg.remat_policy != "none" and mode == "train":
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers and cfg.num_scan_groups > 1:
+        if use_cache:
+            (x, aux), new_scan_cache = jax.lax.scan(body, (x, aux0),
+                                                    (params["scan"], scan_cache))
+        else:
+            def body_nocache(carry, params_g):
+                return body(carry, (params_g, None))[0], None
+            (x, aux), _ = jax.lax.scan(body_nocache, (x, aux0), params["scan"])
+            new_scan_cache = None
+    else:
+        aux = aux0
+        slices = []
+        for g in range(cfg.num_scan_groups):
+            params_g = jax.tree.map(lambda v: v[g], params["scan"])
+            cache_g = jax.tree.map(lambda v: v[g], scan_cache) if use_cache else None
+            (x, aux), nc = body((x, aux), (params_g, cache_g))
+            slices.append(nc)
+        new_scan_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+                          if use_cache else None)
+
+    new_cache = {"scan": new_scan_cache} if use_cache else None
+    for j, kind in enumerate(cfg.tail_kinds):
+        tail_cache = cache.get(f"tail{j}") if use_cache else None
+        x, nc, a = apply_block(kind, params[f"tail{j}"], x, cfg,
+                               positions=positions, mode=mode, cache=tail_cache,
+                               cache_len=cache_len, decode_attn_fn=decode_attn_fn)
+        aux = aux + a
+        if use_cache:
+            new_cache[f"tail{j}"] = nc
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _inputs_to_x(params, batch, cfg):
+    """Resolve tokens vs precomputed frame embeddings (modality stub)."""
+    if cfg.modality == "audio_frames":
+        x = batch["frames"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_pos(batch["positions"], cfg.d_model, x.dtype)
+    return x
+
+
+def forward_logits(params, batch, cfg, *, mode="train", cache=None, cache_len=None,
+                   decode_attn_fn=None):
+    x = _inputs_to_x(params, batch, cfg)
+    x, new_cache, aux = apply_stack(params, x, cfg, positions=batch["positions"],
+                                    mode=mode, cache=cache, cache_len=cache_len,
+                                    decode_attn_fn=decode_attn_fn)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params, x, cfg)
+    return logits, new_cache, aux
+
+
+def train_loss(params, batch, cfg, *, decode_attn_fn=None):
+    """Causal LM loss. batch: tokens/frames [B,S], labels [B,S], positions."""
+    logits, _, aux = forward_logits(params, batch, cfg, mode="train")
+    labels = batch["labels"]
+    V = cfg.padded_vocab
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < cfg.vocab_size)
+    nll = jnp.where(mask, lse - ll, 0.0)
+    nll = constrain(nll, "batch", None)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+def prefill(params, batch, cfg, cache, *, decode_attn_fn=None):
+    """Fill the cache from a prompt. Returns (logits [B,S,V], cache')."""
+    logits, new_cache, _ = forward_logits(params, batch, cfg, mode="prefill",
+                                          cache=cache, cache_len=jnp.zeros((), jnp.int32))
+    return logits, new_cache
+
+
+def decode_step(params, batch, cfg, cache, cache_len, *, decode_attn_fn=None):
+    """One decode step. batch tokens [B,1]; returns (logits [B,1,V], cache')."""
+    logits, new_cache, _ = forward_logits(params, batch, cfg, mode="decode",
+                                          cache=cache, cache_len=cache_len,
+                                          decode_attn_fn=decode_attn_fn)
+    return logits, new_cache

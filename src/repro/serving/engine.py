@@ -1,0 +1,181 @@
+"""Serving engine: slot-based continuous batching over prefill/decode steps.
+
+The engine owns a fixed decode batch of ``num_slots`` sequences sharing one
+ring KV cache (per-slot cache rows). Requests queue up; free slots are
+prefilled (chunked) and join the in-flight decode batch; finished slots are
+released to the next request — continuous batching, the vLLM/MaxText serving
+idiom, expressed with jit-compiled prefill/decode steps.
+
+On CPU it runs reduced configs end-to-end (agents in examples/serve_agents.py
+talk to it); on the production mesh the same functions lower through
+launch/dryrun.py (prefill_32k / decode_32k / long_500k cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.serving.sampler import sample
+from repro.serving.tokenizer import ByteTokenizer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: str
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    # filled by the engine
+    prompt_tokens: int = 0
+    output_text: str = ""
+    output_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    cache_len: int = 0
+    remaining: int = 0
+    generated: Optional[list] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg, *, num_slots: int = 4, capacity: int = 512,
+                 params=None, seed: int = 0):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.tokenizer = ByteTokenizer(cfg.vocab_size)
+        self.num_slots = num_slots
+        self.capacity = capacity
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else self.model.init(key)
+        self.cache = self.model.init_cache(num_slots, capacity)
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self.cache_lens = jnp.zeros((num_slots,), jnp.int32)
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._rng = jax.random.PRNGKey(seed + 1)
+        self._next_rid = 0
+
+        # jit entry points (per-slot prefill via batch=1 view, shared decode)
+        self._jit_decode = jax.jit(self._decode_step_fn)
+        self._jit_prefill = jax.jit(self._prefill_fn)
+
+    # ---- jit'd computations ------------------------------------------------
+    def _prefill_fn(self, params, tokens, positions):
+        cache1 = self.model.init_cache(1, self.capacity)
+        batch = {("frames" if self.cfg.modality == "audio_frames" else "tokens"): tokens,
+                 "positions": positions}
+        logits, cache1 = self.model.prefill(params, batch, cache1)
+        return logits[:, -1], cache1
+
+    def _decode_step_fn(self, params, cache, tokens, positions, cache_len):
+        batch = {"tokens": tokens, "positions": positions}
+        logits, cache = self.model.decode_step(params, batch, cache, cache_len)
+        return logits[:, 0], cache
+
+    # ---- public API -----------------------------------------------------------
+    def submit(self, prompt: str, *, max_new_tokens: int = 64,
+               temperature: float = 0.0) -> Request:
+        self._next_rid += 1
+        req = Request(self._next_rid, prompt, max_new_tokens, temperature)
+        self._queue.put(req)
+        return req
+
+    def generate(self, prompt: str, *, max_new_tokens: int = 64,
+                 temperature: float = 0.0) -> str:
+        req = self.submit(prompt, max_new_tokens=max_new_tokens,
+                          temperature=temperature)
+        self.run_until_drained()
+        return req.output_text
+
+    # ---- engine loop --------------------------------------------------------
+    def _admit(self):
+        """Prefill queued requests into free slots (continuous batching)."""
+        for si, slot in enumerate(self.slots):
+            if slot.request is not None or self._queue.empty():
+                continue
+            req = self._queue.get()
+            t0 = time.perf_counter()
+            ids = self.tokenizer.encode(req.prompt)[-(self.capacity - req.max_new_tokens - 1):]
+            req.prompt_tokens = len(ids)
+            tokens = jnp.asarray([ids], jnp.int32)
+            positions = jnp.arange(len(ids), dtype=jnp.int32)[None, :]
+            if self.cfg.modality == "audio_frames":
+                # modality stub: frame embeddings stand in for token ids
+                tokens = jax.nn.one_hot(tokens % self.cfg.d_model, self.cfg.d_model,
+                                        dtype=jnp.dtype(self.cfg.dtype))
+            last_logits, cache1 = self._jit_prefill(self.params, tokens, positions)
+            # copy the single-row cache into slot si of the shared cache;
+            # scan caches are [L, B, ...] (batch dim 1), tail caches [B, ...]
+            def _scan_leaf(full, one):
+                return jax.lax.dynamic_update_slice(
+                    full, one.astype(full.dtype), (0, si) + (0,) * (full.ndim - 2))
+
+            def _tail_leaf(full, one):
+                return jax.lax.dynamic_update_slice(
+                    full, one.astype(full.dtype), (si,) + (0,) * (full.ndim - 1))
+
+            self.cache = {
+                k: jax.tree.map(_scan_leaf if k == "scan" else _tail_leaf,
+                                self.cache[k], cache1[k])
+                for k in self.cache}
+            self.cache_lens = self.cache_lens.at[si].set(len(ids))
+            slot.request = req
+            slot.cache_len = len(ids)
+            slot.remaining = req.max_new_tokens
+            self._rng, k = jax.random.split(self._rng)
+            first = sample(last_logits, k, temperature=req.temperature,
+                           vocab_limit=self.cfg.vocab_size)
+            slot.generated = [int(first[0])]
+            slot.remaining -= 1
+            req.prefill_s += time.perf_counter() - t0
+
+    def _active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.request is not None]
+
+    def step(self):
+        """One engine iteration: admit + one fused decode step for all slots."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return False
+        t0 = time.perf_counter()
+        last = [self.slots[i].generated[-1] if self.slots[i].request else 0
+                for i in range(self.num_slots)]
+        tokens = jnp.asarray(last, jnp.int32)[:, None]
+        positions = self.cache_lens[:, None]
+        logits, self.cache = self._jit_decode(self.params, self.cache, tokens,
+                                              positions, self.cache_lens)
+        self._rng, k = jax.random.split(self._rng)
+        nxt = sample(logits, k, temperature=0.0, vocab_limit=self.cfg.vocab_size)
+        dt = time.perf_counter() - t0
+        self.cache_lens = self.cache_lens + jnp.asarray(
+            [1 if s.request else 0 for s in self.slots], jnp.int32)
+        for i in active:
+            slot = self.slots[i]
+            slot.generated.append(int(nxt[i]))
+            slot.cache_len += 1
+            slot.remaining -= 1
+            slot.request.decode_s += dt / max(len(active), 1)
+            done = (slot.remaining <= 0
+                    or slot.generated[-1] == self.tokenizer.eos_id
+                    or slot.cache_len >= self.capacity - 1)
+            if done:
+                req = slot.request
+                req.output_tokens = len(slot.generated)
+                req.output_text = self.tokenizer.decode(slot.generated)
+                self.slots[i] = _Slot()
+                self.cache_lens = self.cache_lens.at[i].set(0)
+        return True
+
+    def run_until_drained(self):
+        while self.step() or not self._queue.empty():
+            pass

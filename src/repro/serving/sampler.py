@@ -1,0 +1,20 @@
+"""Token samplers: greedy / temperature / top-k, pure jax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0,
+           vocab_limit: int = 0):
+    """logits [B, V] -> token ids [B]."""
+    if vocab_limit:
+        mask = jnp.arange(logits.shape[-1]) < vocab_limit
+        logits = jnp.where(mask, logits, -1e30)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits >= kth, logits, -1e30)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,40 @@
+"""Elastic scaling: mesh re-derivation + checkpoint reshard-on-restore."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpoint import restore, save
+from repro.distributed.elastic import (best_mesh_shape, make_elastic_mesh,
+                                       reshard_tree)
+
+
+def test_best_mesh_shape_degrades_gracefully():
+    assert best_mesh_shape(512) == (32, 16)     # two pods
+    assert best_mesh_shape(256) == (16, 16)     # one pod
+    assert best_mesh_shape(240) == (15, 16)     # lost one host of 16
+    assert best_mesh_shape(252) == (63, 4)      # lost 4 chips: TP degrades
+    assert best_mesh_shape(13) == (13, 1)       # prime survivor count
+    assert best_mesh_shape(1) == (1, 1)
+
+
+def test_checkpoint_restores_onto_new_mesh(tmp_path):
+    """Save under one layout, restore under another (elastic restart)."""
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.arange(64.0).reshape(8, 8), "step": jnp.array(7)}
+    save(d, 7, tree)
+    mesh = make_elastic_mesh(jax.devices())      # 1 CPU -> (1, 1)
+    shardings = {"w": NamedSharding(mesh, P("data", "model")),
+                 "step": NamedSharding(mesh, P())}
+    got, step = restore(d, tree, shardings=shardings)
+    assert step == 7
+    assert jnp.array_equal(got["w"], tree["w"])
+    assert got["w"].sharding == shardings["w"]
+
+
+def test_reshard_tree_places_leaves():
+    mesh = make_elastic_mesh(jax.devices())
+    tree = {"a": jnp.ones((4, 4)), "b": (jnp.zeros((2,)),)}
+    ps = {"a": P(None, None), "b": (P(None),)}
+    out = reshard_tree(tree, mesh, ps)
+    assert out["a"].sharding.mesh.shape == dict(mesh.shape)

@@ -1,0 +1,305 @@
+"""FAME core unit tests: FaaS platform, workflow, memory, cache, wrapper,
+fusion — the paper's §3 mechanisms."""
+import json
+
+import pytest
+
+from repro.core.config import CONFIGS
+from repro.core.faas import FaaSPlatform, FaaSTimeout, FunctionDef
+from repro.core.fusion import plan_consolidated, plan_singleton
+from repro.core.kvstore import KVStore
+from repro.core.memory import AgentMemory, MemoryEntry
+from repro.core.mcp import FastMCP, rpc_call, rpc_tools_list
+from repro.core.objectstore import ObjectStore
+from repro.core.telemetry import Trace, use_trace
+from repro.core.toolcache import CacheManager
+from repro.core.workflow import (ChoiceState, FailState, StateMachine,
+                                 SucceedState, TaskState, build_react_machine)
+from repro.core.wrapper import parse_server_source, wrap_server
+
+
+# ---------------------------------------------------------------------------
+# FaaS platform
+# ---------------------------------------------------------------------------
+
+
+def _echo(payload, ctx):
+    ctx.charge(payload.get("work_s", 0.1))
+    return dict(payload, handled=True)
+
+
+def test_cold_start_then_warm():
+    p = FaaSPlatform()
+    p.deploy(FunctionDef("f", _echo, cold_start_s=2.0))
+    _, t1 = p.invoke("f", {"work_s": 0.5}, 0.0)
+    assert t1 == pytest.approx(2.5)              # cold start + work
+    _, t2 = p.invoke("f", {"work_s": 0.5}, t1)
+    assert t2 == pytest.approx(t1 + 0.5)         # warm
+    assert p.stats["f"]["cold_starts"] == 1
+    assert p.stats["f"]["invocations"] == 2
+
+
+def test_retention_reclaim_causes_new_cold_start():
+    p = FaaSPlatform()
+    p.deploy(FunctionDef("f", _echo, cold_start_s=1.0, retention_s=60.0))
+    _, t1 = p.invoke("f", {}, 0.0)
+    p.invoke("f", {}, t1 + 120.0)                # past retention
+    assert p.stats["f"]["cold_starts"] == 2
+
+
+def test_concurrent_invocations_scale_instances():
+    p = FaaSPlatform()
+    p.deploy(FunctionDef("f", _echo, cold_start_s=1.0))
+    p.invoke("f", {"work_s": 10.0}, 0.0)         # occupies instance until 11
+    p.invoke("f", {"work_s": 10.0}, 1.0)         # needs a second instance
+    assert p.stats["f"]["cold_starts"] == 2
+    assert len(p.instances["f"]) == 2
+
+
+def test_timeout_enforced():
+    p = FaaSPlatform()
+    p.deploy(FunctionDef("f", _echo, timeout_s=5.0))
+    with pytest.raises(FaaSTimeout):
+        p.invoke("f", {"work_s": 10.0}, 0.0)
+
+
+def test_billing_gb_seconds():
+    p = FaaSPlatform()
+    p.deploy(FunctionDef("f", _echo, memory_mb=1024, cold_start_s=0.0))
+    p.invoke("f", {"work_s": 2.0}, 0.0)
+    assert p.stats["f"]["gb_s"] == pytest.approx(2.0)
+
+
+def test_platform_retry_on_injected_failure():
+    p = FaaSPlatform()
+    p.deploy(FunctionDef("f", _echo))
+    p.inject_failures("f", 1)
+    res, _ = p.invoke("f", {}, 0.0)
+    assert res["handled"]
+    assert p.stats["f"]["errors"] == 1
+
+
+def test_straggler_speculative_execution():
+    p = FaaSPlatform(straggler_deadline_s=1.0)
+    p.deploy(FunctionDef("f", _echo, cold_start_s=0.0))
+    res, t_end = p.invoke("f", {"work_s": 5.0}, 0.0)
+    assert p.stats["f"]["speculative_retries"] == 1
+    assert res["handled"]
+
+
+# ---------------------------------------------------------------------------
+# Workflow (Step Functions)
+# ---------------------------------------------------------------------------
+
+
+def test_react_machine_cycles_until_success():
+    p = FaaSPlatform()
+    attempts = []
+
+    def planner(payload, ctx):
+        return dict(payload, plan="p")
+
+    def actor(payload, ctx):
+        attempts.append(1)
+        return dict(payload, result=len(attempts))
+
+    def evaluator(payload, ctx):
+        ok = payload["result"] >= 2
+        return dict(payload, verdict={"success": ok, "needs_retry": not ok})
+
+    for name, h in [("P", planner), ("A", actor), ("E", evaluator)]:
+        p.deploy(FunctionDef(name, h))
+    m = build_react_machine(p, planner_fn="P", actor_fn="A", evaluator_fn="E",
+                            max_iterations=3)
+    payload, t, status = m.execute({"iteration": 1}, 0.0)
+    assert status == "SUCCEEDED"
+    assert len(attempts) == 2                      # one retry cycle
+
+
+def test_react_machine_fails_after_max_iterations():
+    p = FaaSPlatform()
+    for name in ("P", "A"):
+        p.deploy(FunctionDef(name, lambda pl, ctx: pl))
+    p.deploy(FunctionDef("E", lambda pl, ctx: dict(
+        pl, verdict={"success": False, "needs_retry": True})))
+    m = build_react_machine(p, planner_fn="P", actor_fn="A", evaluator_fn="E",
+                            max_iterations=3)
+    _, _, status = m.execute({"iteration": 1}, 0.0)
+    assert status == "FAILED"
+
+
+def test_task_retry_then_dlq():
+    p = FaaSPlatform()
+    p.deploy(FunctionDef("boom", lambda pl, ctx: 1 / 0))
+    m = StateMachine("m", p, [TaskState("T", "boom", next="Done"),
+                              SucceedState("Done"), FailState()], "T")
+    _, _, status = m.execute({}, 0.0)
+    assert status == "FAILED"                       # retries exhausted → DLQ
+
+
+# ---------------------------------------------------------------------------
+# Memory (§3.2)
+# ---------------------------------------------------------------------------
+
+
+def test_memory_persist_and_inject_order():
+    mem = AgentMemory(KVStore())
+    for i in range(3):
+        mem.persist(MemoryEntry("s1", f"inv{i}", f"q{i}",
+                                [{"role": "tool", "tool": "t",
+                                  "arguments": {"x": i}, "content": f"r{i}"}],
+                                f"resp{i}"))
+    mem.persist(MemoryEntry("s2", "invX", "other", [], "respX"))
+    ctx = mem.render_context("s1")
+    assert "r0" in ctx and "r2" in ctx and "respX" not in ctx
+    assert ctx.index("r0") < ctx.index("r1") < ctx.index("r2")
+    assert "[ToolMessage tool=t" in ctx
+
+
+def test_memory_disabled_is_empty():
+    mem = AgentMemory(KVStore(), enabled=False)
+    mem.persist(MemoryEntry("s", "i", "q", [], "r"))
+    assert mem.render_context("s") == ""
+
+
+# ---------------------------------------------------------------------------
+# Object store + cache (§3.3.2)
+# ---------------------------------------------------------------------------
+
+
+def test_objectstore_ttl_staleness():
+    store = ObjectStore()
+    store.put("b", "k", b"data", {"ttl_s": 10}, t=100.0)
+    assert store.get("b", "k", t=105.0) is not None
+    assert store.get("b", "k", t=111.0) is None      # stale
+
+
+def test_cache_hit_miss_and_ttl_zero():
+    store = ObjectStore()
+    cache = CacheManager(store)
+    hit, _ = cache.lookup("tool", {"a": 1}, ttl_s=-1, t=0.0)
+    assert not hit
+    cache.put("tool", {"a": 1}, {"out": 42}, ttl_s=-1, t=0.0)
+    hit, val = cache.lookup("tool", {"a": 1}, ttl_s=-1, t=1000.0)
+    assert hit and val == {"out": 42}
+    # ttl 0 disables caching entirely
+    cache.put("t2", {}, {"x": 1}, ttl_s=0, t=0.0)
+    hit, _ = cache.lookup("t2", {}, ttl_s=0, t=0.0)
+    assert not hit
+    # different args -> different key
+    hit, _ = cache.lookup("tool", {"a": 2}, ttl_s=-1, t=0.0)
+    assert not hit
+
+
+# ---------------------------------------------------------------------------
+# Wrapper automation (§3.3.1)
+# ---------------------------------------------------------------------------
+
+SAMPLE_SOURCE = '''
+import os
+from repro.core.mcp import FastMCP
+
+mcp = FastMCP("sample")
+API = "https://example.com"
+
+@mcp.tool(description="fetch a url")
+@fame.wrapper()
+def fetch(url: str, max_length: int = 5000):
+    return url
+
+@mcp.tool()
+@fame.wrapper()
+async def fetch_async(url: str):
+    return url
+
+def helper(x):
+    return x
+'''
+
+
+def test_ast_parse_detects_tools_and_helpers():
+    parsed = parse_server_source(SAMPLE_SOURCE)
+    assert parsed.tool_names == ["fetch", "fetch_async"]
+    assert parsed.async_tools == ["fetch_async"]
+    assert "helper" in parsed.helper_functions
+    assert parsed.server_var == "mcp"
+    assert any("import os" in i for i in parsed.imports)
+    assert any("API" in c for c in parsed.constants)
+
+
+def test_wrap_server_generates_handler_and_serves_rpc():
+    server = FastMCP("sample")
+
+    @server.tool(description="fetch a url")
+    def fetch(url: str, max_length: int = 5000):
+        return f"fetched {url}"
+
+    @server.tool()
+    async def fetch_async(url: str):
+        return f"async {url}"
+
+    w = wrap_server(server, source=None)
+    assert "lambda_handler" in w.wrapper_source
+    p = FaaSPlatform()
+    p.deploy(w.function_def())
+    resp, _ = p.invoke("mcp-sample", {"body": rpc_tools_list()}, 0.0)
+    tools = [t["name"] for t in resp["body"]["result"]["tools"]]
+    assert tools == ["fetch", "fetch_async"]
+    resp, _ = p.invoke("mcp-sample",
+                       {"body": rpc_call("fetch", {"url": "http://x"})}, 0.0)
+    assert "fetched http://x" in resp["body"]["result"]["content"][0]["text"]
+    resp, _ = p.invoke("mcp-sample",
+                       {"body": rpc_call("fetch_async", {"url": "y"})}, 0.0)
+    assert "async y" in resp["body"]["result"]["content"][0]["text"]
+
+
+def test_wrap_server_source_mismatch_raises():
+    server = FastMCP("sample")
+
+    @server.tool()
+    def fetch(url: str):
+        return url
+
+    with pytest.raises(ValueError):
+        wrap_server(server, source=SAMPLE_SOURCE)   # fetch_async missing
+
+
+# ---------------------------------------------------------------------------
+# Fusion (§3.3.2 / §5.3.2)
+# ---------------------------------------------------------------------------
+
+
+def _two_servers():
+    a, b = FastMCP("a", memory_mb=128), FastMCP("b", memory_mb=400)
+
+    @a.tool()
+    def t_a(x: int):
+        return x + 1
+
+    @b.tool()
+    def t_b(x: int):
+        return x * 2
+
+    return [wrap_server(a), wrap_server(b)]
+
+
+def test_singleton_vs_consolidated_memory_and_cold_starts():
+    singles = plan_singleton(_two_servers())
+    consol = plan_consolidated(_two_servers(), "fused")
+    assert len(singles.functions) == 2
+    assert len(consol.functions) == 1
+    assert consol.functions[0].memory_mb == 400      # max of constituents
+    # consolidated: ONE cold start serves both tools
+    p = FaaSPlatform()
+    for fn in consol.functions:
+        p.deploy(fn)
+    p.invoke("fused", {"body": rpc_call("t_a", {"x": 1})}, 0.0)
+    p.invoke("fused", {"body": rpc_call("t_b", {"x": 2})}, 10.0)
+    assert p.stats["fused"]["cold_starts"] == 1
+    # singleton: one per server
+    p2 = FaaSPlatform()
+    for fn in singles.functions:
+        p2.deploy(fn)
+    p2.invoke(singles.tool_to_function["t_a"], {"body": rpc_call("t_a", {"x": 1})}, 0.0)
+    p2.invoke(singles.tool_to_function["t_b"], {"body": rpc_call("t_b", {"x": 2})}, 10.0)
+    assert sum(p2.stats[f.name]["cold_starts"] for f in singles.functions) == 2

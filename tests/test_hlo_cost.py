@@ -1,0 +1,69 @@
+"""HLO cost parser: trip-count awareness validated against XLA itself."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_scan_equals_unroll_flops():
+    def f_scan(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    def f_unroll(x, w):
+        for _ in range(10):
+            x = jnp.tanh(x @ w)
+        return x
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    s_scan = hlo_cost.analyze(_compile(f_scan, x, w).as_text())
+    s_unroll = hlo_cost.analyze(_compile(f_unroll, x, w).as_text())
+    analytic = 2 * 256 ** 3 * 10
+    assert s_scan.flops == pytest.approx(s_unroll.flops, rel=0.02)
+    assert s_scan.flops == pytest.approx(analytic, rel=0.05)
+
+
+def test_unrolled_matches_xla_cost_analysis():
+    def f(x, w):
+        return x @ w @ w
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = _compile(f, x, w)
+    ours = hlo_cost.analyze(c.as_text()).flops
+    xla = c.cost_analysis()["flops"]
+    assert ours == pytest.approx(xla, rel=0.05)
+
+
+def test_nested_scans_multiply():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=4)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    s = hlo_cost.analyze(_compile(f, x, w).as_text())
+    analytic = 2 * 64 ** 3 * 12
+    assert s.flops == pytest.approx(analytic, rel=0.1)
+
+
+def test_collective_parse_smoke():
+    # no multi-device here; just ensure the summary structure is sane
+    def f(x):
+        return jnp.sum(x ** 2)
+    s = hlo_cost.analyze(_compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32)).as_text())
+    assert s.collective_bytes == 0
+    assert s.bytes_accessed > 0

@@ -1,5 +1,6 @@
 """Serve a (reduced) assigned architecture behind the FAME agents: batched
-requests through the continuous-batching engine as the agents' LLM backend.
+requests through the continuous-batching engine as the agents' LLM backend,
+on the serving fast path (bucketed prefill + chunked on-device decode).
 
     PYTHONPATH=src python examples/serve_agents.py --arch recurrentgemma-9b
 """
@@ -11,7 +12,7 @@ from repro.configs.registry import ARCHS
 from repro.core.config import CONFIGS
 from repro.core.llm import JaxLLM, rates_for_arch
 from repro.core.runtime import FameRuntime
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import EngineConfig, ServingEngine
 
 
 def main():
@@ -19,27 +20,43 @@ def main():
     ap.add_argument("--arch", default="qwen2.5-3b", choices=sorted(ARCHS))
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="decode tokens per jit'd inner loop")
+    ap.add_argument("--block-w", type=int, default=256,
+                    help="decode-attention KV block (cache capacity aligns to it)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].reduced(dtype="float32", param_dtype="float32",
                                    vocab_size=512)
-    engine = ServingEngine(cfg, num_slots=args.slots, capacity=192)
-    print(f"engine up: arch={cfg.name} slots={args.slots}")
+    engine = ServingEngine(cfg, num_slots=args.slots, capacity=192,
+                           engine_cfg=EngineConfig(decode_chunk=args.chunk,
+                                                   block_w=args.block_w))
+    print(f"engine up: arch={cfg.name} slots={args.slots} "
+          f"buckets={list(engine.buckets)} chunk={args.chunk}")
 
     # 1) raw batched serving
     t0 = time.time()
     reqs = [engine.submit(f"request {i}: summarize the introduction of paper {i}",
-                          max_new_tokens=16) for i in range(args.requests)]
+                          max_new_tokens=16, temperature=args.temperature,
+                          top_k=args.top_k) for i in range(args.requests)]
     engine.run_until_drained()
     dt = time.time() - t0
     toks = sum(r.output_tokens for r in reqs)
+    stats = engine.stats()
     print(f"batched serving: {args.requests} requests, {toks} tokens, "
           f"{dt:.1f}s wall ({toks / dt:.1f} tok/s on CPU interpret)")
+    print(f"fast path: {stats['prefill_compiles']} prefill compiles over "
+          f"{len(stats['prefill_buckets'])} buckets, "
+          f"{stats['host_syncs_per_token']:.3f} host syncs/token "
+          f"({stats['host_syncs']} syncs / {stats['decode_tokens']} decode tokens)")
 
     # 2) the same engine as the agents' LLM backend (one workflow invocation)
     rt = FameRuntime(config=CONFIGS["M+C"], max_iterations=1)
     backend = JaxLLM(engine, max_new_tokens=8,
-                     latency=rates_for_arch(args.arch))
+                     latency=rates_for_arch(args.arch),
+                     temperature=args.temperature, top_k=args.top_k)
     for role in ("planner", "actor", "evaluator"):
         rt.set_llm(role, backend)
     rt.deploy_mcp(rs.APP.servers, rs.APP.sources)
@@ -48,6 +65,7 @@ def main():
     i_tok, o_tok = tr.llm_tokens()
     print(f"agent workflow on JaxLLM: status={res.statuses[0]} "
           f"llm_calls={tr.count('llm')} in_tok={i_tok} out_tok={o_tok}")
+    print(f"serving stats after agents: {backend.serving_stats()}")
     print("(untrained weights -> workflow outcome is expected to DNF; the "
           "point is the full tokenize->prefill->decode serving path under "
           "the agents)")

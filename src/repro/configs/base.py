@@ -88,6 +88,9 @@ class ModelConfig:
 
     # ---- execution flags (perf knobs; see EXPERIMENTS.md §Perf) -------------
     use_pallas: bool = False         # True on real TPU; dry-run uses the XLA path
+    decode_block_w: int = 256        # decode-attention KV block (serving engine
+                                     # rounds cache capacity up to this so the
+                                     # kernel never re-pads the cache per step)
     remat_policy: str = "full"       # none | minimal | full  (§Perf knob)
     scan_layers: bool = True
     bf16_reduce: bool = False        # §Perf: bf16 cross-device partial sums

@@ -140,12 +140,29 @@ class ScriptedOracle(LLMBackend):
 
 
 class JaxLLM(LLMBackend):
+    """FAME agents on the real serving engine's sync-free fast path.
+
+    ``temperature`` / ``top_k`` ride through to the engine's on-device
+    per-slot sampler; ``serving_stats`` exposes the engine's fast-path
+    counters (compiles, host syncs, decode tokens) so agent benchmarks can
+    report serving efficiency alongside workflow metrics.
+    """
+
     def __init__(self, engine, max_new_tokens: int = 48,
-                 latency: Optional[LatencyModel] = None):
+                 latency: Optional[LatencyModel] = None,
+                 temperature: float = 0.0, top_k: int = 0):
         super().__init__(latency or LatencyModel(base_s=0.02), name="jaxllm")
         self.engine = engine
         self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        self.top_k = top_k
 
     def _generate(self, system: str, context: str) -> str:
         return self.engine.generate(system + "\n" + context,
-                                    max_new_tokens=self.max_new_tokens)
+                                    max_new_tokens=self.max_new_tokens,
+                                    temperature=self.temperature,
+                                    top_k=self.top_k)
+
+    def serving_stats(self) -> Dict[str, Any]:
+        stats = getattr(self.engine, "stats", None)
+        return stats() if callable(stats) else {}

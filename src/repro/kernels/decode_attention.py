@@ -77,8 +77,13 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, q_per_kv: int,
     G = q_per_kv
     block_w = min(block_w, W)
     Wp = -(-W // block_w) * block_w
-    kp = jnp.pad(k_cache, ((0, 0), (0, Wp - W), (0, 0), (0, 0)))
-    vp = jnp.pad(v_cache, ((0, 0), (0, Wp - W), (0, 0), (0, 0)))
+    if Wp == W:
+        # capacity already block-aligned (the serving engine rounds it up):
+        # no per-step copy of the whole cache
+        kp, vp = k_cache, v_cache
+    else:
+        kp = jnp.pad(k_cache, ((0, 0), (0, Wp - W), (0, 0), (0, 0)))
+        vp = jnp.pad(v_cache, ((0, 0), (0, Wp - W), (0, 0), (0, 0)))
     nw = Wp // block_w
     clen = jnp.asarray(cache_len, jnp.int32)
     if clen.ndim == 0:

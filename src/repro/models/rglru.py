@@ -41,17 +41,27 @@ def rglru_defs(cfg):
     }
 
 
-def causal_conv1d(x, w, b, state=None):
+def causal_conv1d(x, w, b, state=None, length=None):
     """Depthwise causal conv. x [B,S,R], w [W,R]; state [B,W-1,R] or None.
 
-    Returns (y [B,S,R], new_state [B,W-1,R]).
+    ``length`` (traced scalar, optional): number of valid leading positions
+    when ``x`` is right-padded (bucketed prefill) — the returned state then
+    holds the inputs at positions [length-W+1, length) rather than the padded
+    tail. Returns (y [B,S,R], new_state [B,W-1,R]).
     """
     W = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
     xs = jnp.concatenate([state, x], axis=1)          # [B, S+W-1, R]
     y = sum(xs[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
-    new_state = xs[:, -(W - 1):] if W > 1 else state
+    if W <= 1:
+        new_state = state
+    elif length is None:
+        new_state = xs[:, -(W - 1):]
+    else:
+        # xs index j holds the input at position j - (W-1); the state for a
+        # sequence ending at `length` is positions [length-W+1, length).
+        new_state = jax.lax.dynamic_slice_in_dim(xs, length, W - 1, axis=1)
     return y.astype(x.dtype), new_state
 
 
@@ -66,9 +76,16 @@ def _gates(p, x):
     return a, beta * i * xf
 
 
-def rglru_scan(p, x, h0=None):
-    """Linear recurrence over [B,S,R] via associative scan. Returns (y, h_S)."""
+def rglru_scan(p, x, h0=None, mask=None):
+    """Linear recurrence over [B,S,R] via associative scan. Returns (y, h_S).
+
+    ``mask`` [B,S] bool: padded positions become identity steps (a=1, input=0)
+    so the final state equals the state after the last *valid* position.
+    """
     a, bx = _gates(p, x)                       # [B,S,R] f32
+    if mask is not None:
+        a = jnp.where(mask[..., None], a, 1.0)
+        bx = jnp.where(mask[..., None], bx, 0.0)
     if h0 is not None:
         bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
 
@@ -87,11 +104,13 @@ def rglru_step(p, x, h):
     return h_new[:, None].astype(x.dtype), h_new
 
 
-def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full"):
+def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full", length=None,
+                          mask=None):
     """Full Griffin temporal-mixing branch (pre-norm handled by caller).
 
     x [B,S,D] -> (y [B,S,D], new_cache) with cache {"h": [B,R] f32,
-    "conv": [B,W-1,R]}.
+    "conv": [B,W-1,R]}. ``length``/``mask`` mark the valid prefix when the
+    prompt is right-padded to a prefill bucket.
     """
     u = jnp.einsum("bsd,dr->bsr", x, p["wx"])
     gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["wy"]))
@@ -100,12 +119,15 @@ def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full"):
         y, h = rglru_step(p, c, cache["h"])
     elif cfg.use_pallas:
         from repro.kernels import rglru_scan as _krg
-        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"])
+        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], length=length)
         a, bx = _gates(p, c)
+        if mask is not None:
+            a = jnp.where(mask[..., None], a, 1.0)
+            bx = jnp.where(mask[..., None], bx, 0.0)
         y, h = _krg.rglru_scan(a.astype(c.dtype), bx.astype(c.dtype))
         y = y.astype(c.dtype)
     else:
-        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"])
-        y, h = rglru_scan(p, c)
+        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], length=length)
+        y, h = rglru_scan(p, c, mask=mask)
     out = jnp.einsum("bsr,rd->bsd", y * gate, p["wo"])
     return out, {"h": h, "conv": conv_state}

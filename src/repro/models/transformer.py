@@ -117,11 +117,15 @@ def init_cache(cfg, batch: int, capacity: int):
 # ---------------------------------------------------------------------------
 
 
-def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len, decode_attn_fn):
+def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len,
+                decode_attn_fn, prefill_len=None):
     """Attention temporal mixer (pre-norm residual handled by caller).
 
     ``cfg.use_pallas`` routes the hot spots to the TPU kernels
     (repro.kernels); the default XLA path is what the dry-run lowers.
+    ``prefill_len`` (traced scalar) marks the valid prompt prefix when the
+    input is right-padded to a prefill bucket — the cache write then keeps
+    the last real positions, not the padded tail.
     """
     window = cfg.sliding_window if kind != cfgbase.LOCAL_ATTN else cfg.local_window
     q, k, v = attn.qkv_proj(p, x, cfg, positions)
@@ -130,7 +134,8 @@ def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len, decode_at
         if cfg.use_pallas:
             from repro.kernels import decode_attention as _kda
             o = _kda.decode_attention(q, kc, vc, cache_len,
-                                      q_per_kv=cfg.q_per_kv, window=window)
+                                      q_per_kv=cfg.q_per_kv, window=window,
+                                      block_w=cfg.decode_block_w)
         else:
             o = decode_attn_fn(q, kc, vc, cache_len, q_per_kv=cfg.q_per_kv,
                                window=window)
@@ -148,27 +153,46 @@ def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len, decode_at
             cap = cache["k"].shape[1]
             S = k.shape[1]
             if cap >= S:
+                # right-padding is harmless here: padded rows land at
+                # positions >= prefill_len, which decode masks by cache_len
                 kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
                 vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
-            else:  # windowed cache: keep the last `cap` positions, ring-aligned
+            elif prefill_len is None:
+                # windowed cache: keep the last `cap` positions, ring-aligned
                 k_tail, v_tail = k[:, S - cap:], v[:, S - cap:]
                 roll = (S - cap) % cap
                 kc = jnp.roll(k_tail, shift=roll, axis=1).astype(cache["k"].dtype)
                 vc = jnp.roll(v_tail, shift=roll, axis=1).astype(cache["v"].dtype)
+            else:
+                # windowed cache under padding: keep positions
+                # [prefill_len - cap, prefill_len), ring-aligned at p % cap
+                def ring_write(knew, tgt):
+                    padded = jnp.concatenate(
+                        [jnp.zeros_like(knew[:, :cap]), knew], axis=1)
+                    tail = jax.lax.dynamic_slice_in_dim(padded, prefill_len,
+                                                        cap, axis=1)
+                    return jnp.roll(tail, shift=prefill_len % cap,
+                                    axis=1).astype(tgt.dtype)
+                kc, vc = ring_write(k, cache["k"]), ring_write(v, cache["v"])
             new_cache = {"k": kc, "v": vc}
         else:
             new_cache = cache
     return attn.out_proj(p, o), new_cache
 
 
-def apply_block(kind, p, x, cfg, *, positions, mode, cache, cache_len, decode_attn_fn):
+def apply_block(kind, p, x, cfg, *, positions, mode, cache, cache_len,
+                decode_attn_fn, prefill_len=None, prefill_mask=None):
     """One residual block. Returns (x', new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
+    rec_mode = mode if mode == "decode" else "full"
+    rec_len = prefill_len if mode == "prefill" else None
+    rec_mask = prefill_mask if mode == "prefill" else None
     if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE, cfgbase.LOCAL_ATTN):
         h = apply_norm(p["attn"]["norm"], x, cfg)
         o, new_cache = _attn_mixer(p["attn"], h, cfg, kind=kind, positions=positions,
                                    mode=mode, cache=cache, cache_len=cache_len,
-                                   decode_attn_fn=decode_attn_fn)
+                                   decode_attn_fn=decode_attn_fn,
+                                   prefill_len=rec_len)
         x = x + o
         h2 = apply_norm(p["norm2"], x, cfg)
         if kind == cfgbase.ATTN_MOE:
@@ -179,19 +203,22 @@ def apply_block(kind, p, x, cfg, *, positions, mode, cache, cache_len, decode_at
     if kind == cfgbase.RECURRENT:
         h = apply_norm(p["rec"]["norm"], x, cfg)
         o, new_cache = rglru_mod.apply_recurrent_mixer(
-            p["rec"], h, cfg, cache=cache, mode=mode if mode == "decode" else "full")
+            p["rec"], h, cfg, cache=cache, mode=rec_mode,
+            length=rec_len, mask=rec_mask)
         x = x + o
         h2 = apply_norm(p["norm2"], x, cfg)
         return x + apply_mlp(p["mlp"], h2, cfg), new_cache, aux
     if kind == cfgbase.MLSTM:
         h = apply_norm(p["mlstm"]["norm"], x, cfg)
         o, new_cache = xlstm_mod.apply_mlstm(
-            p["mlstm"], h, cfg, cache=cache, mode=mode if mode == "decode" else "full")
+            p["mlstm"], h, cfg, cache=cache, mode=rec_mode,
+            length=rec_len, mask=rec_mask)
         return x + o, new_cache, aux
     if kind == cfgbase.SLSTM:
         h = apply_norm(p["slstm"]["norm"], x, cfg)
         o, new_cache = xlstm_mod.apply_slstm(
-            p["slstm"], h, cfg, cache=cache, mode=mode if mode == "decode" else "full")
+            p["slstm"], h, cfg, cache=cache, mode=rec_mode,
+            length=rec_len, mask=rec_mask)
         return x + o, new_cache, aux
     raise ValueError(kind)
 
@@ -201,7 +228,27 @@ def apply_block(kind, p, x, cfg, *, positions, mode, cache, cache_len, decode_at
 # ---------------------------------------------------------------------------
 
 
-def _superblock(params_g, cache_g, x, cfg, *, positions, mode, cache_len, decode_attn_fn):
+@jax.custom_vjp
+def _diff_barrier(x):
+    """``optimization_barrier`` with a gradient rule (none exists upstream):
+    the cotangent is barrier'd too, so the backward layers loop keeps the
+    same LICM protection as the forward one."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _diff_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _diff_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
+
+
+def _superblock(params_g, cache_g, x, cfg, *, positions, mode, cache_len,
+                decode_attn_fn, prefill_len=None, prefill_mask=None):
     """Apply one period of the pattern. Returns (x, new_cache_g, aux)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -210,19 +257,20 @@ def _superblock(params_g, cache_g, x, cfg, *, positions, mode, cache_len, decode
     # residual stack out of the (backward) layers loop — that hoist would
     # materialize an f32 copy of the whole [L, B, S, D] stack (MaxText does
     # the same around scanned blocks).
-    x = jax.lax.optimization_barrier(x)
+    x = _diff_barrier(x)
     for i, kind in enumerate(cfg.pattern):
         sub_cache = cache_g.get(f"sub{i}") if cache_g else None
         x, nc, a = apply_block(kind, params_g[f"sub{i}"], x, cfg,
                                positions=positions, mode=mode, cache=sub_cache,
-                               cache_len=cache_len, decode_attn_fn=decode_attn_fn)
+                               cache_len=cache_len, decode_attn_fn=decode_attn_fn,
+                               prefill_len=prefill_len, prefill_mask=prefill_mask)
         new_cache[f"sub{i}"] = nc
         aux = aux + a
     return x, new_cache, aux
 
 
 def apply_stack(params, x, cfg, *, positions, mode, cache=None, cache_len=None,
-                decode_attn_fn=None):
+                decode_attn_fn=None, prefill_len=None, prefill_mask=None):
     """Run all layers. Returns (x, new_cache, aux_loss_sum)."""
     decode_attn_fn = decode_attn_fn or attn.decode_attention
     use_cache = cache is not None
@@ -234,7 +282,9 @@ def apply_stack(params, x, cfg, *, positions, mode, cache=None, cache_len=None,
         x, new_cache_g, a = _superblock(params_g, cache_g, x, cfg,
                                         positions=positions, mode=mode,
                                         cache_len=cache_len,
-                                        decode_attn_fn=decode_attn_fn)
+                                        decode_attn_fn=decode_attn_fn,
+                                        prefill_len=prefill_len,
+                                        prefill_mask=prefill_mask)
         return (x, aux + a), new_cache_g
 
     if cfg.remat_policy != "none" and mode == "train":
@@ -269,7 +319,8 @@ def apply_stack(params, x, cfg, *, positions, mode, cache=None, cache_len=None,
         tail_cache = cache.get(f"tail{j}") if use_cache else None
         x, nc, a = apply_block(kind, params[f"tail{j}"], x, cfg,
                                positions=positions, mode=mode, cache=tail_cache,
-                               cache_len=cache_len, decode_attn_fn=decode_attn_fn)
+                               cache_len=cache_len, decode_attn_fn=decode_attn_fn,
+                               prefill_len=prefill_len, prefill_mask=prefill_mask)
         aux = aux + a
         if use_cache:
             new_cache[f"tail{j}"] = nc
@@ -293,11 +344,19 @@ def _inputs_to_x(params, batch, cfg):
 
 
 def forward_logits(params, batch, cfg, *, mode="train", cache=None, cache_len=None,
-                   decode_attn_fn=None):
+                   decode_attn_fn=None, prefill_len=None):
     x = _inputs_to_x(params, batch, cfg)
+    prefill_mask = None
+    if prefill_len is not None:
+        S = x.shape[1]
+        prefill_mask = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :] < prefill_len,
+            (x.shape[0], S))
     x, new_cache, aux = apply_stack(params, x, cfg, positions=batch["positions"],
                                     mode=mode, cache=cache, cache_len=cache_len,
-                                    decode_attn_fn=decode_attn_fn)
+                                    decode_attn_fn=decode_attn_fn,
+                                    prefill_len=prefill_len,
+                                    prefill_mask=prefill_mask)
     x = apply_norm(params["final_norm"], x, cfg)
     logits = unembed(params, x, cfg)
     return logits, new_cache, aux
@@ -318,10 +377,17 @@ def train_loss(params, batch, cfg, *, decode_attn_fn=None):
     return loss + aux, {"nll": loss, "aux": aux}
 
 
-def prefill(params, batch, cfg, cache, *, decode_attn_fn=None):
-    """Fill the cache from a prompt. Returns (logits [B,S,V], cache')."""
+def prefill(params, batch, cfg, cache, *, length=None, decode_attn_fn=None):
+    """Fill the cache from a prompt. Returns (logits [B,S,V], cache').
+
+    ``length`` (traced scalar, optional): valid prompt length when tokens are
+    right-padded to a bucket — recurrent state, conv state, and windowed KV
+    caches then match an unpadded prefill of the first ``length`` tokens.
+    """
     logits, new_cache, _ = forward_logits(params, batch, cfg, mode="prefill",
-                                          cache=cache, cache_len=jnp.zeros((), jnp.int32))
+                                          cache=cache, cache_len=jnp.zeros((), jnp.int32),
+                                          prefill_len=length,
+                                          decode_attn_fn=decode_attn_fn)
     return logits, new_cache
 
 

@@ -186,19 +186,29 @@ def _group_norm_heads(x, scale, eps=1e-6):
     return (y * scale.astype(jnp.float32)).astype(x.dtype)
 
 
-def apply_mlstm(p, x, cfg, *, cache=None, mode="full"):
-    """x [B,S,D] -> (y, new_cache). cache: {"state": (C,n,m), "conv": [B,W-1,F2]}."""
+def apply_mlstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
+    """x [B,S,D] -> (y, new_cache). cache: {"state": (C,n,m), "conv": [B,W-1,F2]}.
+
+    ``length``/``mask`` mark the valid prefix under right-padded (bucketed)
+    prefill: padded positions get i-gate -> -inf / f-gate -> +large (the same
+    trick the chunkwise cell uses for its internal padding), so they neither
+    write to nor decay the (C, n, m) state.
+    """
     H = cfg.num_heads
     u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
     z = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
     conv_state = cache["conv"] if mode == "decode" else None
-    c, new_conv = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+    c, new_conv = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state,
+                                length=length)
     c = jax.nn.silu(c)
     q = _heads(jnp.einsum("bsf,fg->bsg", c, p["wq"]), H)
     k = _heads(jnp.einsum("bsf,fg->bsg", c, p["wk"]), H)
     v = _heads(jnp.einsum("bsf,fg->bsg", u, p["wv"]), H)
     ig = jnp.einsum("bsf,fh->bsh", u, p["w_ig"]) + p["b_ig"]
     fg = jnp.einsum("bsf,fh->bsh", u, p["w_fg"]) + p["b_fg"]
+    if mask is not None and mode != "decode":
+        ig = jnp.where(mask[..., None], ig, -1e30)
+        fg = jnp.where(mask[..., None], fg, 30.0)
     if mode == "decode":
         h, state = mlstm_step(q, k, v, ig, fg, cache["state"])
     elif cfg.use_pallas:
@@ -212,8 +222,11 @@ def apply_mlstm(p, x, cfg, *, cache=None, mode="full"):
     return y, {"state": state, "conv": new_conv}
 
 
-def slstm_scan(p, x, cfg, state=None):
-    """Sequential sLSTM over [B,S,D]. state: (c,n,h,m) each [B,D] f32."""
+def slstm_scan(p, x, cfg, state=None, mask=None):
+    """Sequential sLSTM over [B,S,D]. state: (c,n,h,m) each [B,D] f32.
+
+    ``mask`` [B,S] bool: padded timesteps carry the state through unchanged.
+    """
     B, S, D = x.shape
     H = cfg.slstm_heads
     hd = D // H
@@ -221,8 +234,11 @@ def slstm_scan(p, x, cfg, state=None):
     if state is None:
         zeros = jnp.zeros((B, D), jnp.float32)
         state = (zeros, zeros, zeros, jnp.full((B, D), -1e30, jnp.float32))
+    if mask is None:
+        mask = jnp.ones((B, S), bool)
 
-    def step(carry, gx):
+    def step(carry, xs):
+        gx, mt = xs                                  # [B,4,D], [B]
         c, n, h, m = carry
         hh = h.reshape(B, H, hd)
         rec = jnp.einsum("bhd,hgde->bhge", hh.astype(x.dtype), p["r_gates"])
@@ -234,16 +250,20 @@ def slstm_scan(p, x, cfg, state=None):
         c_new = fp * c + ip * jnp.tanh(gz)
         n_new = fp * n + ip
         h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
-        return (c_new, n_new, h_new, m_new), h_new.astype(x.dtype)
+        keep = mt[:, None]
+        new = tuple(jnp.where(keep, a, b)
+                    for a, b in zip((c_new, n_new, h_new, m_new), (c, n, h, m)))
+        return new, h_new.astype(x.dtype)
 
     gates_t = jnp.moveaxis(gates_x, 1, 0)           # [S,B,4,D]
-    new_state, hs = jax.lax.scan(step, state, gates_t)
+    mask_t = jnp.moveaxis(mask, 1, 0)               # [S,B]
+    new_state, hs = jax.lax.scan(step, state, (gates_t, mask_t))
     return jnp.moveaxis(hs, 0, 1), new_state
 
 
-def apply_slstm(p, x, cfg, *, cache=None, mode="full"):
+def apply_slstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
     state = cache["state"] if mode == "decode" else None
-    h, new_state = slstm_scan(p, x, cfg, state)
+    h, new_state = slstm_scan(p, x, cfg, state, mask=mask if mode != "decode" else None)
     hf = h.astype(jnp.float32)
     ms = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
     h = ((hf * jax.lax.rsqrt(ms + 1e-6)) * p["out_norm"].astype(jnp.float32)).astype(x.dtype)

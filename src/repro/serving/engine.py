@@ -1,10 +1,24 @@
-"""Serving engine: slot-based continuous batching over prefill/decode steps.
+"""Serving engine: slot-based continuous batching over a sync-free fast path.
 
 The engine owns a fixed decode batch of ``num_slots`` sequences sharing one
 ring KV cache (per-slot cache rows). Requests queue up; free slots are
-prefilled (chunked) and join the in-flight decode batch; finished slots are
-released to the next request — continuous batching, the vLLM/MaxText serving
-idiom, expressed with jit-compiled prefill/decode steps.
+prefilled and join the in-flight decode batch; finished slots are released to
+the next request — continuous batching, the vLLM/MaxText serving idiom.
+
+Fast-path structure (see benchmarks/serving_bench.py for the measurements):
+
+* **Bucketed prefill** — prompts are right-padded to a small set of length
+  buckets, so the prefill function compiles once per bucket instead of once
+  per distinct prompt length. The per-slot cache splice happens *inside* the
+  jit (``dynamic_update_slice`` at the slot index, donated shared cache), not
+  as a host-side tree-map copy.
+* **Chunked decode** — a jit'd ``lax.while_loop`` decodes up to
+  ``decode_chunk`` tokens per engine step with a per-slot done mask
+  (EOS / token budget / capacity), sampling on device with per-slot
+  temperature / top-k (``sampler.sample_batched``). The host syncs at most
+  once per chunk, not once per token.
+* **Aligned cache** — cache capacity is rounded up to the decode-attention
+  kernel block (``block_w``), so the Pallas kernel never re-pads the cache.
 
 On CPU it runs reduced configs end-to-end (agents in examples/serve_agents.py
 talk to it); on the production mesh the same functions lower through
@@ -15,14 +29,49 @@ from __future__ import annotations
 import dataclasses
 import queue
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import Model
-from repro.serving.sampler import sample
+from repro.serving.sampler import sample_batched
 from repro.serving.tokenizer import ByteTokenizer
+
+
+def _auto_buckets(capacity: int, lo: int = 32) -> Tuple[int, ...]:
+    """Power-of-two prompt-length buckets up to (and including) capacity."""
+    buckets = []
+    b = min(lo, capacity)
+    while b < capacity:
+        buckets.append(b)
+        b *= 2
+    buckets.append(capacity)
+    return tuple(buckets)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Serving fast-path knobs.
+
+    prefill_buckets: explicit bucket lengths; None → auto powers-of-two;
+                     empty tuple → exact-length prefill (one compile per
+                     distinct prompt length — the pre-fast-path behaviour,
+                     kept for A/B benchmarking).
+    decode_chunk:    decode tokens per jit'd inner loop (1 → one host sync
+                     per token, the pre-fast-path behaviour). All-greedy
+                     batches additionally compile a sampler-free loop body
+                     (no per-step RNG / top-k sort).
+    block_w:         decode-attention KV block; cache capacity is rounded up
+                     to a multiple of it so the kernel never re-pads.
+    donate:          donate the shared cache to prefill/decode jits
+                     (None → auto: on everywhere except CPU, where XLA
+                     ignores donation and warns).
+    """
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+    decode_chunk: int = 16
+    block_w: int = 256
+    donate: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -31,12 +80,16 @@ class Request:
     prompt: str
     max_new_tokens: int = 64
     temperature: float = 0.0
+    top_k: int = 0
     # filled by the engine
     prompt_tokens: int = 0
     output_text: str = ""
     output_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    latency_s: float = 0.0
+    admit_index: int = -1
+    _submit_t: float = 0.0
 
 
 @dataclasses.dataclass
@@ -49,54 +102,174 @@ class _Slot:
 
 class ServingEngine:
     def __init__(self, cfg, *, num_slots: int = 4, capacity: int = 512,
-                 params=None, seed: int = 0):
-        self.cfg = cfg
-        self.model = Model(cfg)
+                 params=None, seed: int = 0,
+                 engine_cfg: Optional[EngineConfig] = None):
+        self.engine_cfg = engine_cfg or EngineConfig()
+        if self.engine_cfg.decode_chunk < 1:
+            raise ValueError(
+                f"decode_chunk must be >= 1, got {self.engine_cfg.decode_chunk} "
+                "(a zero-length chunk makes no progress)")
+        bw = max(1, self.engine_cfg.block_w)
+        if capacity > bw:
+            capacity = -(-capacity // bw) * bw      # align to kernel block
+        self.cfg = dataclasses.replace(cfg, decode_block_w=bw)
+        self.model = Model(self.cfg)
         self.tokenizer = ByteTokenizer(cfg.vocab_size)
         self.num_slots = num_slots
         self.capacity = capacity
+        buckets = self.engine_cfg.prefill_buckets
+        self.buckets: Tuple[int, ...] = (_auto_buckets(capacity)
+                                         if buckets is None else
+                                         tuple(sorted(buckets)))
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
         self.cache = self.model.init_cache(num_slots, capacity)
         self.slots = [_Slot() for _ in range(num_slots)]
-        self.cache_lens = jnp.zeros((num_slots,), jnp.int32)
         self._queue: "queue.Queue[Request]" = queue.Queue()
         self._rng = jax.random.PRNGKey(seed + 1)
         self._next_rid = 0
+        self._next_admit = 0
 
-        # jit entry points (per-slot prefill via batch=1 view, shared decode)
-        self._jit_decode = jax.jit(self._decode_step_fn)
-        self._jit_prefill = jax.jit(self._prefill_fn)
+        # perf counters (benchmarks/serving_bench.py reads these)
+        self._prefill_shapes: set = set()        # 1 jit compile per entry
+        self._decode_syncs = 0                   # blocking pulls in decode
+        self._prefill_syncs = 0                  # blocking pulls at admission
+        self._decode_tokens = 0
+        self._decode_chunks = 0
+
+        donate = self.engine_cfg.donate
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        dargs = (1,) if donate else ()
+        self._jit_prefill = jax.jit(self._prefill_fn, donate_argnums=dargs)
+        self._jit_decode_chunk = jax.jit(self._decode_chunk_fn,
+                                         donate_argnums=dargs)
 
     # ---- jit'd computations ------------------------------------------------
-    def _prefill_fn(self, params, tokens, positions):
+    def _prefill_fn(self, params, cache, tokens, positions, slot, length, key,
+                    temperature, top_k):
+        """Prefill one (padded) prompt and splice it into the shared cache.
+
+        Everything — forward pass, per-slot cache splice, first-token sample —
+        happens in one jit, compiled once per bucket length.
+        """
         cache1 = self.model.init_cache(1, self.capacity)
         batch = {("frames" if self.cfg.modality == "audio_frames" else "tokens"): tokens,
                  "positions": positions}
-        logits, cache1 = self.model.prefill(params, batch, cache1)
-        return logits[:, -1], cache1
+        logits, cache1 = self.model.prefill(params, batch, cache1, length=length)
+        last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
+                                            keepdims=False)          # [1, V]
+        tok = sample_batched(last, key, temperature=temperature[None],
+                             top_k=top_k[None], vocab_limit=self.cfg.vocab_size)
 
-    def _decode_step_fn(self, params, cache, tokens, positions, cache_len):
-        batch = {"tokens": tokens, "positions": positions}
-        logits, cache = self.model.decode_step(params, batch, cache, cache_len)
-        return logits[:, 0], cache
+        # splice the single-row cache into slot `slot` of the shared cache;
+        # scan caches are [L, B, ...] (batch dim 1), tail caches [B, ...]
+        def _scan_leaf(full, one):
+            return jax.lax.dynamic_update_slice(
+                full, one.astype(full.dtype),
+                (jnp.int32(0), slot) + (jnp.int32(0),) * (full.ndim - 2))
+
+        def _tail_leaf(full, one):
+            return jax.lax.dynamic_update_slice(
+                full, one.astype(full.dtype),
+                (slot,) + (jnp.int32(0),) * (full.ndim - 1))
+
+        cache = {k: jax.tree.map(_scan_leaf if k == "scan" else _tail_leaf,
+                                 cache[k], cache1[k])
+                 for k in cache}
+        return cache, tok[0]
+
+    def _decode_chunk_fn(self, params, cache, last_tok, cache_lens, remaining,
+                         done, temps, top_ks, key):
+        """Decode up to ``decode_chunk`` tokens for every live slot on device.
+
+        Per-slot done mask (EOS / budget / capacity); finished or empty slots
+        keep running in the fixed batch but stop emitting and stop advancing
+        their cache row. Returns everything the host needs in one pull.
+        """
+        chunk = self.engine_cfg.decode_chunk
+        B = self.num_slots
+        eos = self.tokenizer.eos_id
+        tok_buf = jnp.zeros((chunk, B), jnp.int32)
+        emit_buf = jnp.zeros((chunk, B), bool)
+
+        def cond(st):
+            i = st[0]
+            return (i < chunk) & jnp.any(~st[5])
+
+        def body(st):
+            i, cache, last, clens, rem, done, key, tb, eb = st
+            batch = {"tokens": last[:, None], "positions": clens[:, None]}
+            logits, cache = self.model.decode_step(params, batch, cache, clens)
+            if temps is None:                   # statically greedy batch:
+                sub = key                       # no RNG / sort in the loop
+            else:
+                key, sub = jax.random.split(key)
+            nxt = sample_batched(logits[:, 0], sub, temperature=temps,
+                                 top_k=top_ks, vocab_limit=self.cfg.vocab_size)
+            emit = ~done
+            last = jnp.where(emit, nxt, last)
+            clens = clens + emit.astype(jnp.int32)
+            rem = rem - emit.astype(jnp.int32)
+            done = done | (emit & ((rem <= 0) | (nxt == eos)
+                                   | (clens >= self.capacity - 1)))
+            tb = tb.at[i].set(jnp.where(emit, nxt, 0))
+            eb = eb.at[i].set(emit)
+            return (i + 1, cache, last, clens, rem, done, key, tb, eb)
+
+        st = (jnp.int32(0), cache, last_tok, cache_lens, remaining, done,
+              key, tok_buf, emit_buf)
+        _, cache, last_tok, cache_lens, remaining, done, _, tok_buf, emit_buf = \
+            jax.lax.while_loop(cond, body, st)
+        return cache, tok_buf, emit_buf, cache_lens, remaining, done
 
     # ---- public API -----------------------------------------------------------
     def submit(self, prompt: str, *, max_new_tokens: int = 64,
-               temperature: float = 0.0) -> Request:
+               temperature: float = 0.0, top_k: int = 0) -> Request:
+        if max_new_tokens >= self.capacity - 1:
+            raise ValueError(
+                f"max_new_tokens={max_new_tokens} leaves no room for the "
+                f"prompt in a capacity-{self.capacity} cache "
+                f"(need max_new_tokens <= capacity - 2)")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         self._next_rid += 1
-        req = Request(self._next_rid, prompt, max_new_tokens, temperature)
+        req = Request(self._next_rid, prompt, max_new_tokens, temperature,
+                      top_k)
+        req._submit_t = time.perf_counter()
         self._queue.put(req)
         return req
 
     def generate(self, prompt: str, *, max_new_tokens: int = 64,
-                 temperature: float = 0.0) -> str:
+                 temperature: float = 0.0, top_k: int = 0) -> str:
         req = self.submit(prompt, max_new_tokens=max_new_tokens,
-                          temperature=temperature)
+                          temperature=temperature, top_k=top_k)
         self.run_until_drained()
         return req.output_text
 
+    def stats(self) -> dict:
+        toks = max(self._decode_tokens, 1)
+        return {
+            "prefill_compiles": len(self._prefill_shapes),
+            "prefill_buckets": list(self.buckets),
+            "decode_chunk": self.engine_cfg.decode_chunk,
+            "decode_tokens": self._decode_tokens,
+            "decode_chunks": self._decode_chunks,
+            "host_syncs": self._decode_syncs,
+            "host_syncs_per_token": self._decode_syncs / toks,
+            # admission also pulls the first sampled token (once per request,
+            # not per token) — reported separately so the decode-path sync
+            # rate above stays honest
+            "prefill_syncs": self._prefill_syncs,
+        }
+
     # ---- engine loop --------------------------------------------------------
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return n                        # exact-length (legacy) mode
+
     def _admit(self):
         """Prefill queued requests into free slots (continuous batching)."""
         for si, slot in enumerate(self.slots):
@@ -104,76 +277,97 @@ class ServingEngine:
                 continue
             req = self._queue.get()
             t0 = time.perf_counter()
-            ids = self.tokenizer.encode(req.prompt)[-(self.capacity - req.max_new_tokens - 1):]
+            window = self.capacity - req.max_new_tokens - 1   # >= 1 (submit guard)
+            ids = self.tokenizer.encode(req.prompt)[-window:]
             req.prompt_tokens = len(ids)
-            tokens = jnp.asarray([ids], jnp.int32)
-            positions = jnp.arange(len(ids), dtype=jnp.int32)[None, :]
+            bucket = self._bucket_for(len(ids))
+            padded = ids + [self.tokenizer.pad_id] * (bucket - len(ids))
+            tokens = jnp.asarray([padded], jnp.int32)
+            positions = jnp.arange(bucket, dtype=jnp.int32)[None, :]
             if self.cfg.modality == "audio_frames":
                 # modality stub: frame embeddings stand in for token ids
                 tokens = jax.nn.one_hot(tokens % self.cfg.d_model, self.cfg.d_model,
                                         dtype=jnp.dtype(self.cfg.dtype))
-            last_logits, cache1 = self._jit_prefill(self.params, tokens, positions)
-            # copy the single-row cache into slot si of the shared cache;
-            # scan caches are [L, B, ...] (batch dim 1), tail caches [B, ...]
-            def _scan_leaf(full, one):
-                return jax.lax.dynamic_update_slice(
-                    full, one.astype(full.dtype), (0, si) + (0,) * (full.ndim - 2))
-
-            def _tail_leaf(full, one):
-                return jax.lax.dynamic_update_slice(
-                    full, one.astype(full.dtype), (si,) + (0,) * (full.ndim - 1))
-
-            self.cache = {
-                k: jax.tree.map(_scan_leaf if k == "scan" else _tail_leaf,
-                                self.cache[k], cache1[k])
-                for k in self.cache}
-            self.cache_lens = self.cache_lens.at[si].set(len(ids))
+            self._rng, k = jax.random.split(self._rng)
+            self._prefill_shapes.add((bucket, self.cfg.modality))
+            self.cache, first = self._jit_prefill(
+                self.params, self.cache, tokens, positions,
+                jnp.int32(si), jnp.int32(len(ids)), k,
+                jnp.float32(req.temperature), jnp.int32(req.top_k))
             slot.request = req
             slot.cache_len = len(ids)
-            slot.remaining = req.max_new_tokens
-            self._rng, k = jax.random.split(self._rng)
-            first = sample(last_logits, k, temperature=req.temperature,
-                           vocab_limit=self.cfg.vocab_size)
-            slot.generated = [int(first[0])]
-            slot.remaining -= 1
+            slot.remaining = req.max_new_tokens - 1
+            slot.generated = [int(first)]                     # one host sync
+            self._prefill_syncs += 1
+            req.admit_index = self._next_admit
+            self._next_admit += 1
             req.prefill_s += time.perf_counter() - t0
 
-    def _active(self) -> List[int]:
+    def _active(self):
         return [i for i, s in enumerate(self.slots) if s.request is not None]
 
+    def _finalize(self, si: int):
+        slot = self.slots[si]
+        req = slot.request
+        req.output_tokens = len(slot.generated)
+        req.output_text = self.tokenizer.decode(slot.generated)
+        req.latency_s = time.perf_counter() - req._submit_t
+        self.slots[si] = _Slot()
+
     def step(self):
-        """One engine iteration: admit + one fused decode step for all slots."""
+        """One engine iteration: admit + one chunked decode for all slots."""
         self._admit()
         active = self._active()
         if not active:
             return False
         t0 = time.perf_counter()
-        last = [self.slots[i].generated[-1] if self.slots[i].request else 0
-                for i in range(self.num_slots)]
-        tokens = jnp.asarray(last, jnp.int32)[:, None]
-        positions = self.cache_lens[:, None]
-        logits, self.cache = self._jit_decode(self.params, self.cache, tokens,
-                                              positions, self.cache_lens)
+        last = jnp.asarray([s.generated[-1] if s.request else 0
+                            for s in self.slots], jnp.int32)
+        clens = jnp.asarray([s.cache_len for s in self.slots], jnp.int32)
+        rem = jnp.asarray([s.remaining for s in self.slots], jnp.int32)
+        done = jnp.asarray([s.request is None or s.remaining <= 0
+                            or s.cache_len >= self.capacity - 1
+                            or s.generated[-1] == self.tokenizer.eos_id
+                            for s in self.slots], bool)
+        # static specialization: an all-greedy batch (the common agent case)
+        # compiles a loop body with no RNG split / categorical / top-k sort —
+        # jit re-specializes on the None-vs-array structure, so at most three
+        # decode variants ever compile (greedy / temps / temps+top-k)
+        sampling = any(s.request.temperature > 0.0
+                       for s in self.slots if s.request)
+        temps = (jnp.asarray([s.request.temperature if s.request else 0.0
+                              for s in self.slots], jnp.float32)
+                 if sampling else None)
+        top_ks = (jnp.asarray([s.request.top_k if s.request else 0
+                               for s in self.slots], jnp.int32)
+                  if sampling and any(s.request.top_k > 0
+                                      for s in self.slots if s.request)
+                  else None)
         self._rng, k = jax.random.split(self._rng)
-        nxt = sample(logits, k, temperature=0.0, vocab_limit=self.cfg.vocab_size)
+
+        self.cache, tok_buf, emit_buf, clens, rem, done = \
+            self._jit_decode_chunk(self.params, self.cache, last, clens, rem,
+                                   done, temps, top_ks, k)
+        # the ONE host sync of the chunk: pull tokens + masks + slot state
+        tok_buf, emit_buf, clens_h, rem_h, done_h = jax.device_get(
+            (tok_buf, emit_buf, clens, rem, done))
+        self._decode_syncs += 1
+        self._decode_chunks += 1
         dt = time.perf_counter() - t0
-        self.cache_lens = self.cache_lens + jnp.asarray(
-            [1 if s.request else 0 for s in self.slots], jnp.int32)
+
+        emitted = 0
         for i in active:
             slot = self.slots[i]
-            slot.generated.append(int(nxt[i]))
-            slot.cache_len += 1
-            slot.remaining -= 1
+            new = tok_buf[:, i][emit_buf[:, i]]
+            slot.generated.extend(int(t) for t in new)
+            emitted += int(new.size)
+            slot.cache_len = int(clens_h[i])
+            slot.remaining = int(rem_h[i])
             slot.request.decode_s += dt / max(len(active), 1)
-            done = (slot.remaining <= 0
-                    or slot.generated[-1] == self.tokenizer.eos_id
-                    or slot.cache_len >= self.capacity - 1)
-            if done:
-                req = slot.request
-                req.output_tokens = len(slot.generated)
-                req.output_text = self.tokenizer.decode(slot.generated)
-                self.slots[i] = _Slot()
-                self.cache_lens = self.cache_lens.at[i].set(0)
+        self._decode_tokens += emitted
+        for i in active:
+            if bool(done_h[i]):
+                self._finalize(i)
         return True
 
     def run_until_drained(self):

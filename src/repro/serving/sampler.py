@@ -1,4 +1,11 @@
-"""Token samplers: greedy / temperature / top-k, pure jax."""
+"""Token samplers: greedy / temperature / top-k, pure jax.
+
+``sample`` keeps the original host-friendly API (python-scalar temperature,
+branching at trace time). ``sample_batched`` is the serving fast path: all
+parameters are traced per-row vectors, so one jit'd callable serves any mix
+of greedy and stochastic slots without recompiling — it runs inside the
+engine's on-device decode loop.
+"""
 from __future__ import annotations
 
 import jax
@@ -18,3 +25,34 @@ def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0,
         kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
         logits = jnp.where(logits >= kth, logits, -1e30)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_batched(logits, key, *, temperature, top_k=None, vocab_limit: int = 0):
+    """Per-row sampling with traced parameters. logits [B, V] -> ids [B].
+
+    temperature: [B] f32 (<= 0 means greedy for that row), or None for a
+                 statically greedy batch — no RNG / sort ops are traced at
+                 all, which matters inside the engine's per-token decode loop.
+    top_k:       [B] int32 or None (<= 0 means no top-k filter for that row).
+    vocab_limit: static int — ids >= vocab_limit are never produced.
+    """
+    B, V = logits.shape
+    logits = logits.astype(jnp.float32)
+    if vocab_limit:
+        vmask = jnp.arange(V) < vocab_limit
+        logits = jnp.where(vmask[None, :], logits, -1e30)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if temperature is None:
+        return greedy
+    temperature = jnp.asarray(temperature, jnp.float32).reshape(B)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    if top_k is not None:
+        k = jnp.asarray(top_k, jnp.int32).reshape(B)
+        srt = jnp.sort(scaled, axis=-1)                      # ascending
+        idx = jnp.clip(V - k, 0, V - 1)                      # k-th largest
+        kth = jnp.take_along_axis(srt, idx[:, None], axis=-1)
+        keep = (k <= 0)[:, None] | (scaled >= kth)
+        scaled = jnp.where(keep, scaled, -1e30)
+    stochastic = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, stochastic, greedy)

@@ -26,15 +26,21 @@ def main():
                     help="decode-attention KV block (cache capacity aligns to it)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--cache-mode", default="dense", choices=("dense", "paged"),
+                    help="paged = KV page pool + radix prefix sharing "
+                         "(full-attention archs only); agent turns that "
+                         "re-send the conversation prefix skip its prefill")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].reduced(dtype="float32", param_dtype="float32",
                                    vocab_size=512)
     engine = ServingEngine(cfg, num_slots=args.slots, capacity=192,
                            engine_cfg=EngineConfig(decode_chunk=args.chunk,
-                                                   block_w=args.block_w))
+                                                   block_w=args.block_w,
+                                                   cache_mode=args.cache_mode))
     print(f"engine up: arch={cfg.name} slots={args.slots} "
-          f"buckets={list(engine.buckets)} chunk={args.chunk}")
+          f"buckets={list(engine.buckets)} chunk={args.chunk} "
+          f"cache={args.cache_mode}")
 
     # 1) raw batched serving
     t0 = time.time()
@@ -51,6 +57,12 @@ def main():
           f"{len(stats['prefill_buckets'])} buckets, "
           f"{stats['host_syncs_per_token']:.3f} host syncs/token "
           f"({stats['host_syncs']} syncs / {stats['decode_tokens']} decode tokens)")
+    if args.cache_mode == "paged":
+        print(f"prefix sharing: {stats['prefix_hit_rate']:.0%} of prompt "
+              f"tokens served from shared pages "
+              f"({stats['prefix_hit_tokens']}/{stats['prompt_tokens']}), "
+              f"{stats['radix_nodes']} radix nodes, "
+              f"{stats['pages_free']}/{stats['pages_total']} pages free")
 
     # 2) the same engine as the agents' LLM backend (one workflow invocation)
     rt = FameRuntime(config=CONFIGS["M+C"], max_iterations=1)

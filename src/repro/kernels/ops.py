@@ -13,10 +13,12 @@ import jax
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mlstm_chunk as _mc
+from repro.kernels import paged_decode_attention as _pda
 from repro.kernels import rglru_scan as _rg
 
 flash_attention = functools.partial(_fa.flash_attention)
 decode_attention = functools.partial(_da.decode_attention)
+paged_decode_attention = functools.partial(_pda.paged_decode_attention)
 rglru_scan = functools.partial(_rg.rglru_scan)
 mlstm_chunk = functools.partial(_mc.mlstm_chunk)
 
@@ -36,6 +38,14 @@ def decode_attention_jit(q, k_cache, v_cache, cache_len, *, q_per_kv,
     return _da.decode_attention(q, k_cache, v_cache, cache_len,
                                 q_per_kv=q_per_kv, window=window,
                                 block_w=block_w, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("q_per_kv", "interpret"))
+def paged_decode_attention_jit(q, k_pool, v_pool, block_tables, cache_len, *,
+                               q_per_kv, interpret=True):
+    return _pda.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                       cache_len, q_per_kv=q_per_kv,
+                                       interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret"))

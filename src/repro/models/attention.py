@@ -97,13 +97,17 @@ def _block_mask(q_pos, k_pos, window: Optional[int]):
 
 def flash_attention(q, k, v, *, window: Optional[int] = None,
                     block_q: int = 512, block_kv: int = 512,
-                    q_positions=None):
+                    q_positions=None, k_start=None):
     """Causal flash attention, pure-XLA. q,k,v: [B, S(T), H, hd] (KV repeated).
 
     ``q_positions``: int32 [S] *runtime* positions of the q rows (k rows are
     positions 0..T-1). Being a runtime input keeps the per-block masks inside
     the scan bodies — if they were trace-time constants XLA's LICM would hoist
     and materialize all (q-block × kv-block) masks as a giant temp.
+
+    ``k_start``: optional traced scalar — k rows below it are masked out.
+    Extend mode passes a position-ordered ring-cache view whose leading rows
+    may predate position 0 (unwritten); this masks them.
     """
     B, S, H, hd = q.shape
     T = k.shape[1]
@@ -140,6 +144,8 @@ def flash_attention(q, k, v, *, window: Optional[int] = None,
             mask = _block_mask(q_pos, k_pos, window)
             if Tp != T:
                 mask &= (k_pos < T)[None, :]
+            if k_start is not None:
+                mask &= (k_pos >= k_start)[None, :]
             s = s + jnp.where(mask, 0.0, NEG_INF)              # [bq,bkv] bias
             m_cur = jnp.max(s, axis=-1)                       # [B,H,bq]
             m_new = jnp.maximum(m_prev, m_cur)
@@ -222,3 +228,86 @@ def cache_update(k_cache, v_cache, k_new, v_new, cache_len):
     k_cache = k_cache.at[rows, slot].set(k_new[:, 0].astype(k_cache.dtype))
     v_cache = v_cache.at[rows, slot].set(v_new[:, 0].astype(v_cache.dtype))
     return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Extend (chunked-prefill continuation): a chunk of S new tokens at positions
+# [start, start+S) attends to the already-filled cache prefix + itself
+# ---------------------------------------------------------------------------
+
+
+def ring_order(cache, start):
+    """Position-ordered view of a ring cache: row i holds position
+    ``start - cap + i`` (ring slot ``p % cap`` holds position p)."""
+    cap = cache.shape[1]
+    return jnp.roll(cache, shift=-(start % cap), axis=1)
+
+
+def ring_extend_write(cache, chunk, start, length):
+    """Splice a prefill chunk into a ring cache.
+
+    cache [B, cap, ...] (ring: position p at slot p % cap, filled below
+    ``start``); chunk [B, S, ...] holds positions [start, start+S) of which
+    the first ``length`` are valid. Returns the ring holding the last ``cap``
+    positions of the sequence ending at ``start + length``.
+    """
+    cap = cache.shape[1]
+    seq = jnp.concatenate([ring_order(cache, start),
+                           chunk.astype(cache.dtype)], axis=1)
+    # seq row i holds position start - cap + i; the state for a sequence
+    # ending at start+length is positions [start+length-cap, start+length)
+    tail = jax.lax.dynamic_slice_in_dim(seq, length, cap, axis=1)
+    return jnp.roll(tail, shift=(start + length) % cap, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: one device pool of fixed-size pages, per-request block
+# tables (serving/kvpool.py owns allocation; this is the data path)
+# ---------------------------------------------------------------------------
+
+
+def paged_view(pool, block_tables):
+    """Gather a dense per-sequence view from the page pool.
+
+    pool [P, ps, K, hd], block_tables [B, n] int32 -> [B, n*ps, K, hd];
+    row ``w`` of sequence b is position w (pages are position-ordered).
+    """
+    g = pool[block_tables]
+    B, n, ps = g.shape[:3]
+    return g.reshape((B, n * ps) + g.shape[3:])
+
+
+def paged_cache_update(pool_k, pool_v, k_new, v_new, block_tables, cache_len,
+                       page_size: int):
+    """Decode-step write: k_new/v_new [B,1,K,hd] land at position
+    ``cache_len[b]`` of sequence b, routed through its block table."""
+    clen = jnp.asarray(cache_len, jnp.int32)
+    if clen.ndim == 0:
+        clen = jnp.broadcast_to(clen, (block_tables.shape[0],))
+    rows = jnp.arange(block_tables.shape[0])
+    page = block_tables[rows, clen // page_size]
+    off = clen % page_size
+    pool_k = pool_k.at[page, off].set(k_new[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[page, off].set(v_new[:, 0].astype(pool_v.dtype))
+    return pool_k, pool_v
+
+
+def paged_chunk_write(pool, chunk, block_table_row, start, page_size: int):
+    """Extend-chunk write: chunk [1, S, K, hd] at positions [start, start+S)
+    of the (single) sequence whose block table row is [n] int32."""
+    S = chunk.shape[1]
+    pos = start + jnp.arange(S, dtype=jnp.int32)
+    page = block_table_row[pos // page_size]
+    off = pos % page_size
+    return pool.at[page, off].set(chunk[0].astype(pool.dtype))
+
+
+def paged_decode_attention_ref(q, pool_k, pool_v, block_tables, cache_len, *,
+                               q_per_kv: int):
+    """XLA reference for paged decode attention: gather pages into a dense
+    view, then reuse the dense masking math (full attention only — the engine
+    gates paged mode to non-windowed archs)."""
+    kv = paged_view(pool_k, block_tables)
+    vv = paged_view(pool_v, block_tables)
+    return decode_attention(q, kv, vv, cache_len, q_per_kv=q_per_kv,
+                            window=None)

@@ -50,6 +50,11 @@ class Model:
     def decode_step(self, params, batch, cache, cache_len, **kw):
         return tfm.decode_step(params, batch, self.cfg, cache, cache_len, **kw)
 
+    def extend(self, params, batch, cache, cache_len, **kw):
+        """Prefill continuation against a partially-filled cache (chunked
+        prefill / shared-prefix suffix prefill). See transformer.extend."""
+        return tfm.extend(params, batch, self.cfg, cache, cache_len, **kw)
+
     # ---- input construction ------------------------------------------------
     def make_batch(self, tokens_or_frames, *, labels=None, positions=None, start=0):
         cfg = self.cfg

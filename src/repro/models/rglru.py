@@ -114,20 +114,28 @@ def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full", length=None,
     """
     u = jnp.einsum("bsd,dr->bsr", x, p["wx"])
     gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["wy"]))
+    # extend (chunked-prefill continuation) resumes conv + recurrence state
+    # from the cache instead of zeros; everything else matches "full"
+    prev_conv = cache["conv"] if mode == "extend" else None
+    h0 = cache["h"] if mode == "extend" else None
     if mode == "decode":
         c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], cache["conv"])
         y, h = rglru_step(p, c, cache["h"])
     elif cfg.use_pallas:
         from repro.kernels import rglru_scan as _krg
-        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], length=length)
+        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], prev_conv,
+                                      length=length)
         a, bx = _gates(p, c)
         if mask is not None:
             a = jnp.where(mask[..., None], a, 1.0)
             bx = jnp.where(mask[..., None], bx, 0.0)
+        if h0 is not None:
+            bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
         y, h = _krg.rglru_scan(a.astype(c.dtype), bx.astype(c.dtype))
         y = y.astype(c.dtype)
     else:
-        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], length=length)
-        y, h = rglru_scan(p, c, mask=mask)
+        c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], prev_conv,
+                                      length=length)
+        y, h = rglru_scan(p, c, h0=h0, mask=mask)
     out = jnp.einsum("bsr,rd->bsd", y * gate, p["wo"])
     return out, {"h": h, "conv": conv_state}

@@ -118,7 +118,7 @@ def init_cache(cfg, batch: int, capacity: int):
 
 
 def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len,
-                decode_attn_fn, prefill_len=None):
+                decode_attn_fn, prefill_len=None, block_tables=None):
     """Attention temporal mixer (pre-norm residual handled by caller).
 
     ``cfg.use_pallas`` routes the hot spots to the TPU kernels
@@ -126,10 +126,31 @@ def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len,
     ``prefill_len`` (traced scalar) marks the valid prompt prefix when the
     input is right-padded to a prefill bucket — the cache write then keeps
     the last real positions, not the padded tail.
+
+    ``block_tables`` switches the cache layout to paged: cache leaves are a
+    shared page pool [P, page_size, K, hd] and reads/writes route through the
+    per-sequence block table (full attention only — the serving engine gates
+    paged mode to non-windowed archs). ``mode == "extend"`` continues a
+    partially-filled cache: a chunk at positions [cache_len, cache_len+S)
+    attends to the cached prefix plus itself (chunked prefill / shared-prefix
+    suffix prefill).
     """
     window = cfg.sliding_window if kind != cfgbase.LOCAL_ATTN else cfg.local_window
     q, k, v = attn.qkv_proj(p, x, cfg, positions)
-    if mode == "decode":
+    if mode == "decode" and block_tables is not None:
+        ps = cache["k"].shape[1]
+        kc, vc = attn.paged_cache_update(cache["k"], cache["v"], k, v,
+                                         block_tables, cache_len, ps)
+        if cfg.use_pallas:
+            from repro.kernels import paged_decode_attention as _kpda
+            o = _kpda.paged_decode_attention(q, kc, vc, block_tables,
+                                             cache_len, q_per_kv=cfg.q_per_kv)
+        else:
+            o = attn.paged_decode_attention_ref(q, kc, vc, block_tables,
+                                                cache_len,
+                                                q_per_kv=cfg.q_per_kv)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "decode":
         kc, vc = attn.cache_update(cache["k"], cache["v"], k, v, cache_len)
         if cfg.use_pallas:
             from repro.kernels import decode_attention as _kda
@@ -139,6 +160,54 @@ def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len,
         else:
             o = decode_attn_fn(q, kc, vc, cache_len, q_per_kv=cfg.q_per_kv,
                                window=window)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "extend":
+        # chunk positions [start, start+S); first `prefill_len` rows valid
+        S = k.shape[1]
+        start = cache_len
+        length = prefill_len if prefill_len is not None else jnp.int32(S)
+        qpos = start + jnp.arange(S, dtype=jnp.int32)
+        if block_tables is not None:
+            if k.shape[0] != 1:
+                raise NotImplementedError(
+                    "paged extend writes one sequence per call (the engine "
+                    f"prefills slot by slot); got batch {k.shape[0]}")
+            ps = cache["k"].shape[1]
+            kc = attn.paged_chunk_write(cache["k"], k, block_tables[0],
+                                        start, ps)
+            vc = attn.paged_chunk_write(cache["v"], v, block_tables[0],
+                                        start, ps)
+            kv = attn.paged_view(kc, block_tables)
+            vv = attn.paged_view(vc, block_tables)
+            o = attn.flash_attention(q, attn.repeat_kv(kv, cfg.q_per_kv),
+                                     attn.repeat_kv(vv, cfg.q_per_kv),
+                                     q_positions=qpos)
+        else:
+            cap = cache["k"].shape[1]
+            if cap >= S and window is None:
+                # linear cache: splice the chunk in place, attend to the whole
+                # row (stale rows past the chunk are causal-masked exactly)
+                kc = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
+                o = attn.flash_attention(q, attn.repeat_kv(kc, cfg.q_per_kv),
+                                         attn.repeat_kv(vc, cfg.q_per_kv),
+                                         q_positions=qpos)
+            else:
+                # ring (windowed) cache: attend to a position-ordered view of
+                # the last `cap` positions + the chunk, then ring-splice
+                kseq = jnp.concatenate(
+                    [attn.ring_order(cache["k"], start), k.astype(cache["k"].dtype)], axis=1)
+                vseq = jnp.concatenate(
+                    [attn.ring_order(cache["v"], start), v.astype(cache["v"].dtype)], axis=1)
+                o = attn.flash_attention(
+                    q, attn.repeat_kv(kseq, cfg.q_per_kv),
+                    attn.repeat_kv(vseq, cfg.q_per_kv), window=window,
+                    q_positions=cap + jnp.arange(S, dtype=jnp.int32),
+                    k_start=jnp.maximum(cap - start, 0))
+                kc = attn.ring_extend_write(cache["k"], k, start, length)
+                vc = attn.ring_extend_write(cache["v"], v, start, length)
         new_cache = {"k": kc, "v": vc}
     else:
         kr = attn.repeat_kv(k, cfg.q_per_kv)
@@ -181,18 +250,20 @@ def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len,
 
 
 def apply_block(kind, p, x, cfg, *, positions, mode, cache, cache_len,
-                decode_attn_fn, prefill_len=None, prefill_mask=None):
+                decode_attn_fn, prefill_len=None, prefill_mask=None,
+                block_tables=None):
     """One residual block. Returns (x', new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
-    rec_mode = mode if mode == "decode" else "full"
-    rec_len = prefill_len if mode == "prefill" else None
-    rec_mask = prefill_mask if mode == "prefill" else None
+    rec_mode = mode if mode in ("decode", "extend") else "full"
+    rec_len = prefill_len if mode in ("prefill", "extend") else None
+    rec_mask = prefill_mask if mode in ("prefill", "extend") else None
     if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE, cfgbase.LOCAL_ATTN):
         h = apply_norm(p["attn"]["norm"], x, cfg)
         o, new_cache = _attn_mixer(p["attn"], h, cfg, kind=kind, positions=positions,
                                    mode=mode, cache=cache, cache_len=cache_len,
                                    decode_attn_fn=decode_attn_fn,
-                                   prefill_len=rec_len)
+                                   prefill_len=rec_len,
+                                   block_tables=block_tables)
         x = x + o
         h2 = apply_norm(p["norm2"], x, cfg)
         if kind == cfgbase.ATTN_MOE:
@@ -248,7 +319,8 @@ _diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
 
 
 def _superblock(params_g, cache_g, x, cfg, *, positions, mode, cache_len,
-                decode_attn_fn, prefill_len=None, prefill_mask=None):
+                decode_attn_fn, prefill_len=None, prefill_mask=None,
+                block_tables=None):
     """Apply one period of the pattern. Returns (x, new_cache_g, aux)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -263,14 +335,16 @@ def _superblock(params_g, cache_g, x, cfg, *, positions, mode, cache_len,
         x, nc, a = apply_block(kind, params_g[f"sub{i}"], x, cfg,
                                positions=positions, mode=mode, cache=sub_cache,
                                cache_len=cache_len, decode_attn_fn=decode_attn_fn,
-                               prefill_len=prefill_len, prefill_mask=prefill_mask)
+                               prefill_len=prefill_len, prefill_mask=prefill_mask,
+                               block_tables=block_tables)
         new_cache[f"sub{i}"] = nc
         aux = aux + a
     return x, new_cache, aux
 
 
 def apply_stack(params, x, cfg, *, positions, mode, cache=None, cache_len=None,
-                decode_attn_fn=None, prefill_len=None, prefill_mask=None):
+                decode_attn_fn=None, prefill_len=None, prefill_mask=None,
+                block_tables=None):
     """Run all layers. Returns (x, new_cache, aux_loss_sum)."""
     decode_attn_fn = decode_attn_fn or attn.decode_attention
     use_cache = cache is not None
@@ -284,7 +358,8 @@ def apply_stack(params, x, cfg, *, positions, mode, cache=None, cache_len=None,
                                         cache_len=cache_len,
                                         decode_attn_fn=decode_attn_fn,
                                         prefill_len=prefill_len,
-                                        prefill_mask=prefill_mask)
+                                        prefill_mask=prefill_mask,
+                                        block_tables=block_tables)
         return (x, aux + a), new_cache_g
 
     if cfg.remat_policy != "none" and mode == "train":
@@ -320,7 +395,8 @@ def apply_stack(params, x, cfg, *, positions, mode, cache=None, cache_len=None,
         x, nc, a = apply_block(kind, params[f"tail{j}"], x, cfg,
                                positions=positions, mode=mode, cache=tail_cache,
                                cache_len=cache_len, decode_attn_fn=decode_attn_fn,
-                               prefill_len=prefill_len, prefill_mask=prefill_mask)
+                               prefill_len=prefill_len, prefill_mask=prefill_mask,
+                               block_tables=block_tables)
         aux = aux + a
         if use_cache:
             new_cache[f"tail{j}"] = nc
@@ -344,7 +420,11 @@ def _inputs_to_x(params, batch, cfg):
 
 
 def forward_logits(params, batch, cfg, *, mode="train", cache=None, cache_len=None,
-                   decode_attn_fn=None, prefill_len=None):
+                   decode_attn_fn=None, prefill_len=None, block_tables=None,
+                   with_logits=True):
+    """``with_logits=False`` skips final-norm + unembed and returns None
+    logits — intermediate prefill chunks only need the cache side effects,
+    and the unembed is the dominant matmul at real vocab sizes."""
     x = _inputs_to_x(params, batch, cfg)
     prefill_mask = None
     if prefill_len is not None:
@@ -356,7 +436,10 @@ def forward_logits(params, batch, cfg, *, mode="train", cache=None, cache_len=No
                                     mode=mode, cache=cache, cache_len=cache_len,
                                     decode_attn_fn=decode_attn_fn,
                                     prefill_len=prefill_len,
-                                    prefill_mask=prefill_mask)
+                                    prefill_mask=prefill_mask,
+                                    block_tables=block_tables)
+    if not with_logits:
+        return None, new_cache, aux
     x = apply_norm(params["final_norm"], x, cfg)
     logits = unembed(params, x, cfg)
     return logits, new_cache, aux
@@ -391,9 +474,37 @@ def prefill(params, batch, cfg, cache, *, length=None, decode_attn_fn=None):
     return logits, new_cache
 
 
-def decode_step(params, batch, cfg, cache, cache_len, *, decode_attn_fn=None):
-    """One decode step. batch tokens [B,1]; returns (logits [B,1,V], cache')."""
+def decode_step(params, batch, cfg, cache, cache_len, *, decode_attn_fn=None,
+                block_tables=None):
+    """One decode step. batch tokens [B,1]; returns (logits [B,1,V], cache').
+
+    ``block_tables`` [B, P] int32 switches attention caches to the paged
+    layout (cache leaves are page pools; see serving/kvpool.py).
+    """
     logits, new_cache, _ = forward_logits(params, batch, cfg, mode="decode",
                                           cache=cache, cache_len=cache_len,
-                                          decode_attn_fn=decode_attn_fn)
+                                          decode_attn_fn=decode_attn_fn,
+                                          block_tables=block_tables)
+    return logits, new_cache
+
+
+def extend(params, batch, cfg, cache, cache_len, *, length=None,
+           decode_attn_fn=None, block_tables=None, with_logits=True):
+    """Prefill continuation: a chunk of S tokens at positions
+    [cache_len, cache_len+S) against an already partially-filled cache.
+
+    Attention layers attend to the cached prefix + the chunk; recurrent /
+    conv / xLSTM layers resume from their cached state. ``length`` (traced
+    scalar) marks the valid chunk prefix when the chunk is right-padded to a
+    bucket. Powers chunked prefill past the largest bucket and shared-prefix
+    suffix prefill in paged mode. Returns (logits [B,S,V], cache');
+    ``with_logits=False`` returns (None, cache') and skips the unembed —
+    only a prompt's final chunk needs logits.
+    """
+    logits, new_cache, _ = forward_logits(params, batch, cfg, mode="extend",
+                                          cache=cache, cache_len=cache_len,
+                                          prefill_len=length,
+                                          decode_attn_fn=decode_attn_fn,
+                                          block_tables=block_tables,
+                                          with_logits=with_logits)
     return logits, new_cache

@@ -197,7 +197,7 @@ def apply_mlstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
     H = cfg.num_heads
     u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
     z = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
-    conv_state = cache["conv"] if mode == "decode" else None
+    conv_state = cache["conv"] if mode in ("decode", "extend") else None
     c, new_conv = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state,
                                 length=length)
     c = jax.nn.silu(c)
@@ -211,6 +211,12 @@ def apply_mlstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
         fg = jnp.where(mask[..., None], fg, 30.0)
     if mode == "decode":
         h, state = mlstm_step(q, k, v, ig, fg, cache["state"])
+    elif mode == "extend":
+        # chunked-prefill continuation: resume (C, n, m) from the cache (the
+        # Pallas chunk kernel has no initial-state input, so extend always
+        # takes the XLA chunkwise path)
+        h, state = mlstm_chunkwise(q, k, v, ig, fg, cache["state"],
+                                   chunk=cfg.mlstm_chunk)
     elif cfg.use_pallas:
         from repro.kernels import mlstm_chunk as _kmc
         h = _kmc.mlstm_chunk(q, k, v, ig, fg, chunk=cfg.mlstm_chunk)
@@ -262,7 +268,7 @@ def slstm_scan(p, x, cfg, state=None, mask=None):
 
 
 def apply_slstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
-    state = cache["state"] if mode == "decode" else None
+    state = cache["state"] if mode in ("decode", "extend") else None
     h, new_state = slstm_scan(p, x, cfg, state, mask=mask if mode != "decode" else None)
     hf = h.astype(jnp.float32)
     ms = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)

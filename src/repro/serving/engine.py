@@ -19,6 +19,23 @@ Fast-path structure (see benchmarks/serving_bench.py for the measurements):
   once per chunk, not once per token.
 * **Aligned cache** — cache capacity is rounded up to the decode-attention
   kernel block (``block_w``), so the Pallas kernel never re-pads the cache.
+* **Chunked prefill** — prompts longer than the largest bucket are split into
+  bucket-sized chunks: the first chunk takes the normal bucketed prefill, the
+  rest run ``model.extend`` (prefill continuation against the already-filled
+  cache). No more silent exact-length fallback past the last bucket; prompts
+  truncate only at the hard capacity window, and that truncation is counted
+  (``Request.truncated_tokens``, ``stats()["truncated_tokens"]``).
+* **Paged KV + radix prefix sharing** — ``EngineConfig(cache_mode="paged")``
+  swaps the dense per-slot cache rows for one pool of fixed-size KV pages
+  (serving/kvpool.py) with per-request block tables, indexed by a radix
+  token-trie (serving/radix.py). A request whose prompt shares a prefix with
+  any earlier request reuses the prefix's pages outright and only prefills
+  the suffix — prefill work and cache memory scale with *unique* tokens
+  across the batch, the property that makes N agents × one shared system
+  prompt sublinear (FAME's context-reuse result, PAPER.md §3.3). Decode
+  gathers K/V through the block table (``kernels/paged_decode_attention`` on
+  TPU, gather reference on CPU). ``cache_mode="dense"`` keeps the PR-1 path
+  for A/B (benchmarks/prefix_bench.py measures both).
 
 On CPU it runs reduced configs end-to-end (agents in examples/serve_agents.py
 talk to it); on the production mesh the same functions lower through
@@ -26,17 +43,49 @@ launch/dryrun.py (prefill_32k / decode_32k / long_500k cells).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import queue
 import time
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import Model
+from repro.serving import kvpool
+from repro.serving.radix import RadixTree
 from repro.serving.sampler import sample_batched
 from repro.serving.tokenizer import ByteTokenizer
+
+
+def _slot_extract(cache, slot):
+    """Single-row view of slot ``slot``: scan leaves are [L, B, ...], tail
+    leaves [B, ...] (mirrors ``_slot_splice``)."""
+    def _scan_get(full):
+        return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=1)
+
+    def _tail_get(full):
+        return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=0)
+
+    return {k: jax.tree.map(_scan_get if k == "scan" else _tail_get, cache[k])
+            for k in cache}
+
+
+def _slot_splice(cache, cache1, slot):
+    """Write a single-row cache pytree back into row ``slot``."""
+    def _scan_leaf(full, one):
+        return jax.lax.dynamic_update_slice(
+            full, one.astype(full.dtype),
+            (jnp.int32(0), slot) + (jnp.int32(0),) * (full.ndim - 2))
+
+    def _tail_leaf(full, one):
+        return jax.lax.dynamic_update_slice(
+            full, one.astype(full.dtype),
+            (slot,) + (jnp.int32(0),) * (full.ndim - 1))
+
+    return {k: jax.tree.map(_scan_leaf if k == "scan" else _tail_leaf,
+                            cache[k], cache1[k])
+            for k in cache}
 
 
 def _auto_buckets(capacity: int, lo: int = 32) -> Tuple[int, ...]:
@@ -67,11 +116,23 @@ class EngineConfig:
     donate:          donate the shared cache to prefill/decode jits
                      (None → auto: on everywhere except CPU, where XLA
                      ignores donation and warns).
+    cache_mode:      "dense" (PR-1 per-slot cache rows) or "paged" (one page
+                     pool + per-request block tables + radix prefix sharing;
+                     full-attention archs only — see kvpool.supports_paged).
+    page_size:       KV tokens per page in paged mode; capacity is rounded up
+                     to a multiple of it. Smaller pages share finer prefixes
+                     at more gather overhead.
+    num_pages:       device pages in the pool (None → auto: trash page +
+                     2 × num_slots × pages-per-request, leaving headroom for
+                     retained prefixes before LRU eviction kicks in).
     """
     prefill_buckets: Optional[Tuple[int, ...]] = None
     decode_chunk: int = 16
     block_w: int = 256
     donate: Optional[bool] = None
+    cache_mode: str = "dense"
+    page_size: int = 16
+    num_pages: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -83,6 +144,8 @@ class Request:
     top_k: int = 0
     # filled by the engine
     prompt_tokens: int = 0
+    truncated_tokens: int = 0      # dropped at the hard capacity window
+    prefix_hit_tokens: int = 0     # paged: prompt tokens served from shared pages
     output_text: str = ""
     output_tokens: int = 0
     prefill_s: float = 0.0
@@ -90,6 +153,8 @@ class Request:
     latency_s: float = 0.0
     admit_index: int = -1
     _submit_t: float = 0.0
+    _ids: Optional[list] = None    # tokenized prompt, cached across admission
+                                   # retries (paged head-of-line waits)
 
 
 @dataclasses.dataclass
@@ -98,6 +163,11 @@ class _Slot:
     cache_len: int = 0
     remaining: int = 0
     generated: Optional[list] = None
+    # paged mode bookkeeping
+    token_ids: Optional[list] = None      # prompt ids (post-truncation)
+    pages_shared: Optional[list] = None   # radix-matched prefix pages (tree-owned)
+    pages_priv: Optional[list] = None     # this request's own pages
+    node: Optional[object] = None         # pinned radix node
 
 
 class ServingEngine:
@@ -109,9 +179,22 @@ class ServingEngine:
             raise ValueError(
                 f"decode_chunk must be >= 1, got {self.engine_cfg.decode_chunk} "
                 "(a zero-length chunk makes no progress)")
+        mode = self.engine_cfg.cache_mode
+        if mode not in ("dense", "paged"):
+            raise ValueError(f"cache_mode must be 'dense' or 'paged', got {mode!r}")
+        self.paged = mode == "paged"
         bw = max(1, self.engine_cfg.block_w)
         if capacity > bw:
             capacity = -(-capacity // bw) * bw      # align to kernel block
+        ps = self.engine_cfg.page_size
+        if self.paged:
+            ok, why = kvpool.supports_paged(cfg)
+            if not ok:
+                raise ValueError(f"cache_mode='paged' unsupported for "
+                                 f"{cfg.name}: {why}")
+            if ps < 1:
+                raise ValueError(f"page_size must be >= 1, got {ps}")
+            capacity = -(-capacity // ps) * ps      # align to page size
         self.cfg = dataclasses.replace(cfg, decode_block_w=bw)
         self.model = Model(self.cfg)
         self.tokenizer = ByteTokenizer(cfg.vocab_size)
@@ -123,19 +206,40 @@ class ServingEngine:
                                          tuple(sorted(buckets)))
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
-        self.cache = self.model.init_cache(num_slots, capacity)
+        if self.paged:
+            self._bt_width = capacity // ps
+            n_pages = self.engine_cfg.num_pages
+            if n_pages is None:
+                n_pages = 1 + 2 * num_slots * self._bt_width
+            # self.cache IS the page pool in paged mode: same pytree
+            # structure, batch axis re-purposed as the page axis
+            self.cache = kvpool.init_paged_cache(self.cfg, n_pages, ps)
+            self.kvpool = kvpool.PagePool(n_pages)
+            self.radix = RadixTree(ps)
+            self._bt_device = None      # cached decode block table (device)
+        else:
+            self.cache = self.model.init_cache(num_slots, capacity)
+            self.kvpool = None
+            self.radix = None
         self.slots = [_Slot() for _ in range(num_slots)]
-        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._queue: "collections.deque[Request]" = collections.deque()
         self._rng = jax.random.PRNGKey(seed + 1)
         self._next_rid = 0
         self._next_admit = 0
 
-        # perf counters (benchmarks/serving_bench.py reads these)
+        # perf counters (benchmarks/{serving,prefix}_bench.py read these)
         self._prefill_shapes: set = set()        # 1 jit compile per entry
+        self._extend_shapes: set = set()         # ... for extend chunks
         self._decode_syncs = 0                   # blocking pulls in decode
         self._prefill_syncs = 0                  # blocking pulls at admission
         self._decode_tokens = 0
         self._decode_chunks = 0
+        self._extend_chunks = 0
+        self._truncated_tokens = 0               # dropped at capacity window
+        self._truncated_requests = 0
+        self._pad_tokens = 0                     # prefill bucket padding waste
+        self._prompt_tokens = 0                  # real (unpadded) prompt tokens
+        self._prefix_hit_tokens = 0              # paged: served from shared pages
 
         donate = self.engine_cfg.donate
         if donate is None:
@@ -144,6 +248,11 @@ class ServingEngine:
         self._jit_prefill = jax.jit(self._prefill_fn, donate_argnums=dargs)
         self._jit_decode_chunk = jax.jit(self._decode_chunk_fn,
                                          donate_argnums=dargs)
+        self._jit_extend = jax.jit(self._extend_fn, donate_argnums=dargs,
+                                   static_argnames=("sample",))
+        self._jit_extend_paged = jax.jit(self._extend_paged_fn,
+                                         donate_argnums=dargs,
+                                         static_argnames=("sample",))
 
     # ---- jit'd computations ------------------------------------------------
     def _prefill_fn(self, params, cache, tokens, positions, slot, length, key,
@@ -157,30 +266,55 @@ class ServingEngine:
         batch = {("frames" if self.cfg.modality == "audio_frames" else "tokens"): tokens,
                  "positions": positions}
         logits, cache1 = self.model.prefill(params, batch, cache1, length=length)
+        tok = self._sample_last(logits, length, key, temperature, top_k)
+        # splice the single-row cache into slot `slot` of the shared cache;
+        # scan caches are [L, B, ...] (batch dim 1), tail caches [B, ...]
+        return _slot_splice(cache, cache1, slot), tok
+
+    def _sample_last(self, logits, length, key, temperature, top_k):
+        """Sample one token from the logits at position ``length - 1``."""
         last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
                                             keepdims=False)          # [1, V]
         tok = sample_batched(last, key, temperature=temperature[None],
                              top_k=top_k[None], vocab_limit=self.cfg.vocab_size)
+        return tok[0]
 
-        # splice the single-row cache into slot `slot` of the shared cache;
-        # scan caches are [L, B, ...] (batch dim 1), tail caches [B, ...]
-        def _scan_leaf(full, one):
-            return jax.lax.dynamic_update_slice(
-                full, one.astype(full.dtype),
-                (jnp.int32(0), slot) + (jnp.int32(0),) * (full.ndim - 2))
+    def _extend_fn(self, params, cache, tokens, positions, slot, start,
+                   length, key, temperature, top_k, *, sample: bool):
+        """Dense chunked-prefill continuation for one slot.
 
-        def _tail_leaf(full, one):
-            return jax.lax.dynamic_update_slice(
-                full, one.astype(full.dtype),
-                (slot,) + (jnp.int32(0),) * (full.ndim - 1))
+        Extract the slot's cache row, run ``model.extend`` (the chunk attends
+        to the already-prefilled prefix + itself; recurrent state resumes),
+        splice the row back — all in one jit, compiled once per chunk shape.
+        ``sample=True`` (the prompt's final chunk) additionally unembeds and
+        samples at the last valid position; intermediate chunks skip the
+        unembed matmul entirely.
+        """
+        cache1 = _slot_extract(cache, slot)
+        tok_key = ("frames" if self.cfg.modality == "audio_frames" else "tokens")
+        batch = {tok_key: tokens, "positions": positions}
+        logits, cache1 = self.model.extend(params, batch, cache1, start,
+                                           length=length, with_logits=sample)
+        tok = (self._sample_last(logits, length, key, temperature, top_k)
+               if sample else jnp.int32(-1))
+        return _slot_splice(cache, cache1, slot), tok
 
-        cache = {k: jax.tree.map(_scan_leaf if k == "scan" else _tail_leaf,
-                                 cache[k], cache1[k])
-                 for k in cache}
-        return cache, tok[0]
+    def _extend_paged_fn(self, params, pool, tokens, positions, bt, start,
+                         length, key, temperature, top_k, *, sample: bool):
+        """Paged prefill: write the chunk's K/V into this request's pages and
+        attend to the full block-table view (shared prefix pages included —
+        the radix-matched prefix is never recomputed)."""
+        tok_key = ("frames" if self.cfg.modality == "audio_frames" else "tokens")
+        batch = {tok_key: tokens, "positions": positions}
+        logits, pool = self.model.extend(params, batch, pool, start,
+                                         length=length, block_tables=bt,
+                                         with_logits=sample)
+        tok = (self._sample_last(logits, length, key, temperature, top_k)
+               if sample else jnp.int32(-1))
+        return pool, tok
 
     def _decode_chunk_fn(self, params, cache, last_tok, cache_lens, remaining,
-                         done, temps, top_ks, key):
+                         done, temps, top_ks, key, block_tables=None):
         """Decode up to ``decode_chunk`` tokens for every live slot on device.
 
         Per-slot done mask (EOS / budget / capacity); finished or empty slots
@@ -199,8 +333,16 @@ class ServingEngine:
 
         def body(st):
             i, cache, last, clens, rem, done, key, tb, eb = st
-            batch = {"tokens": last[:, None], "positions": clens[:, None]}
-            logits, cache = self.model.decode_step(params, batch, cache, clens)
+            if self.cfg.modality == "audio_frames":
+                # same frame-embedding stub the admission path applies
+                toks = jax.nn.one_hot(last[:, None] % self.cfg.d_model,
+                                      self.cfg.d_model,
+                                      dtype=jnp.dtype(self.cfg.dtype))
+                batch = {"frames": toks, "positions": clens[:, None]}
+            else:
+                batch = {"tokens": last[:, None], "positions": clens[:, None]}
+            logits, cache = self.model.decode_step(params, batch, cache, clens,
+                                                   block_tables=block_tables)
             if temps is None:                   # statically greedy batch:
                 sub = key                       # no RNG / sort in the loop
             else:
@@ -237,7 +379,7 @@ class ServingEngine:
         req = Request(self._next_rid, prompt, max_new_tokens, temperature,
                       top_k)
         req._submit_t = time.perf_counter()
-        self._queue.put(req)
+        self._queue.append(req)
         return req
 
     def generate(self, prompt: str, *, max_new_tokens: int = 64,
@@ -249,19 +391,48 @@ class ServingEngine:
 
     def stats(self) -> dict:
         toks = max(self._decode_tokens, 1)
-        return {
+        out = {
+            "cache_mode": self.engine_cfg.cache_mode,
             "prefill_compiles": len(self._prefill_shapes),
+            "extend_compiles": len(self._extend_shapes),
             "prefill_buckets": list(self.buckets),
             "decode_chunk": self.engine_cfg.decode_chunk,
             "decode_tokens": self._decode_tokens,
             "decode_chunks": self._decode_chunks,
+            "extend_chunks": self._extend_chunks,
             "host_syncs": self._decode_syncs,
             "host_syncs_per_token": self._decode_syncs / toks,
             # admission also pulls the first sampled token (once per request,
             # not per token) — reported separately so the decode-path sync
             # rate above stays honest
             "prefill_syncs": self._prefill_syncs,
+            # prompt accounting: hard-window truncation (the seed engine
+            # dropped these silently) and bucket padding waste (compute spent
+            # on pad rows — the knob for tuning prefill_buckets from bench
+            # JSON)
+            "truncated_requests": self._truncated_requests,
+            "truncated_tokens": self._truncated_tokens,
+            "prompt_tokens": self._prompt_tokens,
+            "prefill_pad_tokens": self._pad_tokens,
+            "prefill_pad_frac": self._pad_tokens /
+                max(self._pad_tokens + self._prompt_tokens
+                    - self._prefix_hit_tokens, 1),
         }
+        if self.paged:
+            out.update({
+                "page_size": self.engine_cfg.page_size,
+                "pages_total": self.kvpool.num_pages,
+                "pages_free": self.kvpool.num_free,
+                "pages_peak_in_use": self.kvpool.peak_in_use,
+                "radix_nodes": self.radix.num_nodes,
+                "radix_evicted_pages": self.radix.evicted_pages,
+                # the headline: prompt tokens served straight from shared
+                # pages instead of being re-prefilled
+                "prefix_hit_tokens": self._prefix_hit_tokens,
+                "prefix_hit_rate": self._prefix_hit_tokens /
+                    max(self._prompt_tokens, 1),
+            })
+        return out
 
     # ---- engine loop --------------------------------------------------------
     def _bucket_for(self, n: int) -> int:
@@ -270,35 +441,168 @@ class ServingEngine:
                 return b
         return n                        # exact-length (legacy) mode
 
-    def _admit(self):
-        """Prefill queued requests into free slots (continuous batching)."""
-        for si, slot in enumerate(self.slots):
-            if slot.request is not None or self._queue.empty():
-                continue
-            req = self._queue.get()
-            t0 = time.perf_counter()
-            window = self.capacity - req.max_new_tokens - 1   # >= 1 (submit guard)
-            ids = self.tokenizer.encode(req.prompt)[-window:]
-            req.prompt_tokens = len(ids)
-            bucket = self._bucket_for(len(ids))
-            padded = ids + [self.tokenizer.pad_id] * (bucket - len(ids))
-            tokens = jnp.asarray([padded], jnp.int32)
-            positions = jnp.arange(bucket, dtype=jnp.int32)[None, :]
-            if self.cfg.modality == "audio_frames":
-                # modality stub: frame embeddings stand in for token ids
-                tokens = jax.nn.one_hot(tokens % self.cfg.d_model, self.cfg.d_model,
-                                        dtype=jnp.dtype(self.cfg.dtype))
+    def _chunk_plan(self, n: int, start: int) -> List[Tuple[int, int, int]]:
+        """Split ``n`` prompt tokens beginning at position ``start`` into
+        prefill chunks: (offset, real_len, padded_len) triples. All chunks
+        but the last are exactly the largest bucket; the last is bucketed
+        (and clamped so the padded write never overruns capacity)."""
+        mb = max(self.buckets) if self.buckets else n
+        plan = []
+        off = 0
+        while off < n:
+            rest = n - off
+            if rest > mb:
+                plan.append((off, mb, mb))
+            else:
+                padded = min(self._bucket_for(rest),
+                             self.capacity - (start + off))
+                plan.append((off, rest, padded))
+            off += plan[-1][1]
+        return plan
+
+    def _chunk_batch(self, ids: List[int], start: int, padded: int):
+        """Device token/position arrays for one right-padded prefill chunk."""
+        padded_ids = ids + [self.tokenizer.pad_id] * (padded - len(ids))
+        tokens = jnp.asarray([padded_ids], jnp.int32)
+        positions = start + jnp.arange(padded, dtype=jnp.int32)[None, :]
+        if self.cfg.modality == "audio_frames":
+            # modality stub: frame embeddings stand in for token ids
+            tokens = jax.nn.one_hot(tokens % self.cfg.d_model, self.cfg.d_model,
+                                    dtype=jnp.dtype(self.cfg.dtype))
+        return tokens, positions
+
+    def _encode_prompt(self, req: Request) -> List[int]:
+        """Tokenize + clamp to the capacity window, counting what was cut
+        (the seed engine dropped tokens here with no trace at all)."""
+        window = self.capacity - req.max_new_tokens - 1   # >= 1 (submit guard)
+        if req._ids is None:
+            req._ids = self.tokenizer.encode(req.prompt)
+        full = req._ids
+        ids = full[-window:]
+        req.truncated_tokens = len(full) - len(ids)
+        if req.truncated_tokens:
+            self._truncated_tokens += req.truncated_tokens
+            self._truncated_requests += 1
+        req.prompt_tokens = len(ids)
+        self._prompt_tokens += len(ids)
+        return ids
+
+    def _admit_dense(self, si: int, slot: _Slot, req: Request):
+        ids = self._encode_prompt(req)
+        plan = self._chunk_plan(len(ids), 0)
+        first = None
+        for ci, (off, real, padded) in enumerate(plan):
+            tokens, positions = self._chunk_batch(ids[off:off + real], off,
+                                                  padded)
             self._rng, k = jax.random.split(self._rng)
-            self._prefill_shapes.add((bucket, self.cfg.modality))
-            self.cache, first = self._jit_prefill(
-                self.params, self.cache, tokens, positions,
-                jnp.int32(si), jnp.int32(len(ids)), k,
-                jnp.float32(req.temperature), jnp.int32(req.top_k))
-            slot.request = req
-            slot.cache_len = len(ids)
-            slot.remaining = req.max_new_tokens - 1
-            slot.generated = [int(first)]                     # one host sync
-            self._prefill_syncs += 1
+            self._pad_tokens += padded - real
+            if ci == 0:
+                # first chunk: the PR-1 bucketed prefill (fresh cache row)
+                self._prefill_shapes.add((padded, self.cfg.modality))
+                self.cache, tok = self._jit_prefill(
+                    self.params, self.cache, tokens, positions,
+                    jnp.int32(si), jnp.int32(real), k,
+                    jnp.float32(req.temperature), jnp.int32(req.top_k))
+            else:
+                # continuation chunks attend to the already-filled prefix;
+                # only the final chunk unembeds + samples
+                self._extend_shapes.add((padded, self.cfg.modality))
+                self._extend_chunks += 1
+                self.cache, tok = self._jit_extend(
+                    self.params, self.cache, tokens, positions,
+                    jnp.int32(si), jnp.int32(off), jnp.int32(real), k,
+                    jnp.float32(req.temperature), jnp.int32(req.top_k),
+                    sample=ci == len(plan) - 1)
+            if ci == len(plan) - 1:
+                first = tok
+        slot.request = req
+        slot.cache_len = len(ids)
+        slot.remaining = req.max_new_tokens - 1
+        slot.generated = [int(first)]                     # one host sync
+        self._prefill_syncs += 1
+        return True
+
+    def _admit_paged(self, si: int, slot: _Slot, req: Request):
+        """Paged admission: radix-match the prompt, reserve pages, prefill
+        only the un-matched suffix. Returns False (request stays queued) when
+        the pool can't supply pages even after LRU eviction."""
+        ids = self._encode_prompt(req)
+        ps = self.engine_cfg.page_size
+        # always recompute at least the last prompt token (its logits seed
+        # the first sampled token), so cap the usable match one token short
+        shared, node = self.radix.match(ids[:len(ids) - 1])
+        prefix_len = len(shared) * ps
+        total_pages = -(-min(len(ids) + req.max_new_tokens + 1,
+                             self.capacity) // ps)
+        priv = self.kvpool.alloc(total_pages - len(shared))
+        if priv is None:
+            freed = self.radix.evict(total_pages - len(shared)
+                                     - self.kvpool.num_free)
+            self.kvpool.free(freed)
+            priv = self.kvpool.alloc(total_pages - len(shared))
+        if priv is None:
+            self.radix.release(node)
+            # un-count this attempt; the request stays at the queue head
+            self._prompt_tokens -= len(ids)
+            if req.truncated_tokens:
+                self._truncated_tokens -= req.truncated_tokens
+                self._truncated_requests -= 1
+            return False
+        req.prefix_hit_tokens = prefix_len
+        self._prefix_hit_tokens += prefix_len
+        bt = kvpool.block_table_array([shared + priv], self._bt_width)
+        first = None
+        plan = self._chunk_plan(len(ids) - prefix_len, prefix_len)
+        for ci, (off, real, padded) in enumerate(plan):
+            start = prefix_len + off
+            tokens, positions = self._chunk_batch(
+                ids[start:start + real], start, padded)
+            self._rng, k = jax.random.split(self._rng)
+            self._pad_tokens += padded - real
+            self._extend_shapes.add((padded, self.cfg.modality))
+            self._extend_chunks += 1
+            self.cache, tok = self._jit_extend_paged(
+                self.params, self.cache, tokens, positions, bt,
+                jnp.int32(start), jnp.int32(real), k,
+                jnp.float32(req.temperature), jnp.int32(req.top_k),
+                sample=ci == len(plan) - 1)
+            if ci == len(plan) - 1:
+                first = tok
+        slot.request = req
+        slot.cache_len = len(ids)
+        slot.remaining = req.max_new_tokens - 1
+        slot.generated = [int(first)]                     # one host sync
+        slot.token_ids = ids
+        slot.pages_shared = shared
+        slot.pages_priv = priv
+        slot.node = node
+        self._bt_device = None          # slot membership changed
+        self._prefill_syncs += 1
+        return True
+
+    def _admit(self):
+        """Prefill queued requests into free slots (continuous batching).
+
+        Paged mode admits FIFO: if the pool can't cover the head request the
+        whole admission round stops (no smaller request jumps the line), and
+        the head retries next step once decode frees pages.
+        """
+        for si, slot in enumerate(self.slots):
+            if slot.request is not None or not self._queue:
+                continue
+            req = self._queue[0]
+            t0 = time.perf_counter()
+            admitted = (self._admit_paged(si, slot, req) if self.paged
+                        else self._admit_dense(si, slot, req))
+            if not admitted:
+                if not self._active():
+                    raise RuntimeError(
+                        f"paged KV pool too small: request rid={req.rid} "
+                        f"needs more pages than the pool can ever free "
+                        f"(num_pages={self.kvpool.num_pages}, "
+                        f"page_size={self.engine_cfg.page_size})")
+                break
+            self._queue.popleft()
             req.admit_index = self._next_admit
             self._next_admit += 1
             req.prefill_s += time.perf_counter() - t0
@@ -312,6 +616,20 @@ class ServingEngine:
         req.output_tokens = len(slot.generated)
         req.output_text = self.tokenizer.decode(slot.generated)
         req.latency_s = time.perf_counter() - req._submit_t
+        if self.paged:
+            # donate the finished sequence's complete pages to the radix tree
+            # (prompt + generated tokens: the next agent turn's prompt embeds
+            # this whole conversation, so it will match deep), free the rest
+            all_tokens = slot.token_ids + slot.generated
+            kv_cover = slot.cache_len          # positions actually written
+            ps = self.engine_cfg.page_size
+            n_complete = min(kv_cover, len(all_tokens)) // ps
+            bt_pages = slot.pages_shared + slot.pages_priv
+            rejected = self.radix.insert(all_tokens[:n_complete * ps],
+                                         bt_pages[:n_complete])
+            self.kvpool.free(rejected + bt_pages[n_complete:])
+            self.radix.release(slot.node)
+            self._bt_device = None      # slot membership changed
         self.slots[si] = _Slot()
 
     def step(self):
@@ -344,10 +662,22 @@ class ServingEngine:
                                       for s in self.slots if s.request)
                   else None)
         self._rng, k = jax.random.split(self._rng)
+        # paged: the chunk's writes route through per-slot block tables
+        # (admission reserved pages for the whole token budget, so the table
+        # only changes when slot membership does — cached on device between
+        # chunks); empty/done slots point at the trash page. jit
+        # re-specializes on None-vs-array, like temps above.
+        bt = None
+        if self.paged:
+            if self._bt_device is None:
+                self._bt_device = kvpool.block_table_array(
+                    [(s.pages_shared + s.pages_priv) if s.request else []
+                     for s in self.slots], self._bt_width)
+            bt = self._bt_device
 
         self.cache, tok_buf, emit_buf, clens, rem, done = \
             self._jit_decode_chunk(self.params, self.cache, last, clens, rem,
-                                   done, temps, top_ks, k)
+                                   done, temps, top_ks, k, bt)
         # the ONE host sync of the chunk: pull tokens + masks + slot state
         tok_buf, emit_buf, clens_h, rem_h, done_h = jax.device_get(
             (tok_buf, emit_buf, clens, rem, done))
@@ -371,5 +701,5 @@ class ServingEngine:
         return True
 
     def run_until_drained(self):
-        while self.step() or not self._queue.empty():
+        while self.step() or self._queue:
             pass

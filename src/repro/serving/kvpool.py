@@ -1,0 +1,112 @@
+"""Paged KV-cache pool: fixed-size pages, block tables, refcounted sharing.
+
+Instead of one dense cache row per slot (PR-1 layout, ``[num_slots, capacity,
+K, hd]`` per layer), paged mode keeps ONE device-resident pool of
+``num_pages`` fixed-size pages per layer (``[num_pages, page_size, K, hd]``)
+and gives every request a *block table* — the ordered list of pages holding
+its sequence. Two requests whose prompts share a prefix point their leading
+block-table entries at the *same* pages (found via serving/radix.py), so the
+shared prefix is prefilled once and stored once: prefill work and cache
+memory scale with *unique* tokens, not total tokens — the property that makes
+N agents × one system prompt sublinear (PAPER.md §3.3, AgentX).
+
+The device tensors reuse the model's cache pytree structure
+(``transformer.cache_spec`` with batch=num_pages, capacity=page_size), so the
+scan-over-layers stack and the engine's donation/jit plumbing are unchanged;
+only attention reads/writes route through block tables
+(``models/attention.py`` paged helpers, ``kernels/paged_decode_attention``).
+
+Page 0 is reserved as a trash page: block-table padding for unused entries
+and empty slots points at it, so scatter writes from masked-out lanes land
+somewhere harmless.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+TRASH_PAGE = 0
+
+
+class PagePool:
+    """Host-side page allocator over the device pool's first axis.
+
+    All-or-nothing allocation; freeing is idempotent-unsafe by design (a page
+    must be owned by exactly one of: free list, radix tree, a live request).
+    """
+
+    def __init__(self, num_pages: int, *, reserved: int = 1):
+        if num_pages <= reserved:
+            raise ValueError(f"num_pages={num_pages} <= reserved={reserved}")
+        self.num_pages = num_pages
+        self.reserved = reserved
+        # LIFO free list, low pages first out (stable for tests); the
+        # companion set makes the double-free check O(1)
+        self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
+        self._free_set = set(self._free)
+        self.peak_in_use = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_in_use(self) -> int:
+        return self.num_pages - self.reserved - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages or None (never a partial allocation)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(pages)
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        return pages
+
+    def free(self, pages: List[int]):
+        if len(set(pages)) != len(pages):
+            raise ValueError(f"duplicate pages in free: {pages}")
+        for p in pages:
+            if not (self.reserved <= p < self.num_pages):
+                raise ValueError(f"free of invalid page {p}")
+            if p in self._free_set:
+                raise ValueError(f"double free of page {p}")
+        self._free.extend(pages)
+        self._free_set.update(pages)
+
+
+def paged_cache_spec(cfg, num_pages: int, page_size: int):
+    """ShapeDtypeStructs of the paged pool: the model's cache pytree with the
+    batch axis re-purposed as the page axis and capacity as the page size."""
+    from repro.models import transformer as tfm
+    return tfm.cache_spec(cfg, num_pages, page_size)
+
+
+def init_paged_cache(cfg, num_pages: int, page_size: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_cache_spec(cfg, num_pages, page_size))
+
+
+def supports_paged(cfg) -> tuple:
+    """(ok, reason): paged mode needs every layer to be full (non-windowed)
+    attention — KV of a position then depends only on the token prefix, so
+    pages are shareable across requests. Recurrent / conv / xLSTM state and
+    windowed attention need per-request state snapshots (future work)."""
+    from repro.configs import base as cfgbase
+    bad = [k for k in cfg.layer_kinds if k not in (cfgbase.ATTN, cfgbase.ATTN_MOE)]
+    if bad:
+        return False, f"non-attention layers {sorted(set(bad))} keep per-slot state"
+    if cfg.sliding_window is not None:
+        return False, "sliding-window attention: ring cache is not page-shareable"
+    return True, ""
+
+
+def block_table_array(rows: List[List[int]], width: int):
+    """Pad per-slot page lists to a rectangular [B, width] int32 device array
+    (unused entries point at the trash page)."""
+    padded = [list(r[:width]) + [TRASH_PAGE] * (width - len(r)) for r in rows]
+    return jnp.asarray(padded, jnp.int32)

@@ -1,0 +1,160 @@
+"""Radix (token-trie) index over shared KV-cache pages.
+
+Maps token-id prefixes of past requests to chains of KV pages in the paged
+pool (serving/kvpool.py), at page granularity: each trie edge is one
+``page_size``-token block, each node owns exactly one page holding that
+block's K/V. A new request walks the trie with its prompt and reuses every
+matched page without re-prefilling it — the vLLM / SGLang prefix-cache idiom,
+and the serving-side twin of FAME's persisted-memory context reuse (agent
+turns re-send the same conversation prefix; PAPER.md §3.3).
+
+Ownership / lifetime rules:
+
+* The tree owns the pages of its nodes; the page allocator's free list owns
+  everything else. A page is never in both places.
+* ``match`` pins the deepest matched node (refcount) for the lifetime of the
+  request; ``release`` unpins. Eviction removes only *leaf* nodes with
+  refcount 0, so a pinned node's ancestors (which the request's block table
+  references) can never be evicted — they have children.
+* ``insert`` adopts pages from a finished request, one node per complete
+  block. Blocks already present keep the incumbent page and the duplicate is
+  handed back to the caller to free (two identical prompts racing through
+  prefill).
+* Eviction is LRU by a logical clock bumped on every match/insert touch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class RadixNode:
+    page: int                                    # pool page holding this block
+    parent: Optional["RadixNode"]
+    key: Optional[Tuple[int, ...]]               # edge label (page_size tokens)
+    children: Dict[Tuple[int, ...], "RadixNode"] = dataclasses.field(
+        default_factory=dict)
+    ref: int = 0                                 # requests pinned at this node
+    last: int = 0                                # logical clock of last touch
+
+
+class RadixTree:
+    def __init__(self, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        self.root = RadixNode(page=-1, parent=None, key=None)
+        self._tick = 0
+        self.evicted_pages = 0          # engine.stats() reads this; token
+                                        # hit/miss accounting lives in the
+                                        # engine (it caps the usable match)
+
+    # ---- internals ---------------------------------------------------------
+    def _touch(self, node: RadixNode):
+        self._tick += 1
+        while node is not None and node.key is not None:
+            node.last = self._tick
+            node = node.parent
+        self.root.last = self._tick
+
+    def _blocks(self, tokens) -> List[Tuple[int, ...]]:
+        ps = self.page_size
+        n = len(tokens) // ps
+        return [tuple(tokens[i * ps:(i + 1) * ps]) for i in range(n)]
+
+    def _iter_nodes(self):
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    # ---- queries -----------------------------------------------------------
+    def match(self, tokens) -> Tuple[List[int], RadixNode]:
+        """Longest cached prefix of ``tokens`` in whole pages.
+
+        Returns (page chain, deepest matched node) and pins the node — call
+        ``release`` when the request finishes. The caller is responsible for
+        capping the usable prefix (an engine always recomputes at least the
+        last prompt token to get first-token logits).
+        """
+        node, pages = self.root, []
+        for key in self._blocks(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            node = child
+            pages.append(node.page)
+        node.ref += 1
+        self._touch(node)
+        return pages, node
+
+    def release(self, node: RadixNode):
+        assert node.ref > 0, "release without matching match()"
+        node.ref -= 1
+
+    def insert(self, tokens, pages: List[int]) -> List[int]:
+        """Adopt ``pages`` (one per complete block of ``tokens``) into the
+        trie. Returns the duplicate pages NOT adopted (already-present
+        blocks) — the caller must free them."""
+        blocks = self._blocks(tokens)
+        assert len(pages) >= len(blocks), (len(pages), len(blocks))
+        node, rejected = self.root, []
+        for key, page in zip(blocks, pages):
+            child = node.children.get(key)
+            if child is None:
+                child = RadixNode(page=page, parent=node, key=key)
+                node.children[key] = child
+            elif child.page != page:
+                rejected.append(page)
+            node = child
+        self._touch(node)
+        return rejected
+
+    # ---- eviction ----------------------------------------------------------
+    def evict(self, n_pages: int) -> List[int]:
+        """Free up to ``n_pages`` pages by removing LRU unpinned leaves.
+        Returns the freed pages (caller returns them to the allocator).
+
+        One tree walk collects the evictable frontier into a min-heap by
+        ``last``; a parent enters the heap the moment its final child is
+        removed, so bulk eviction is O(N + k log N), not O(N·k).
+        """
+        heap = [(n.last, id(n), n) for n in self._iter_nodes()
+                if not n.children and n.ref == 0]
+        heapq.heapify(heap)
+        freed: List[int] = []
+        while heap and len(freed) < n_pages:
+            _, _, node = heapq.heappop(heap)
+            del node.parent.children[node.key]
+            freed.append(node.page)
+            parent = node.parent
+            if (parent.key is not None and not parent.children
+                    and parent.ref == 0):
+                heapq.heappush(heap, (parent.last, id(parent), parent))
+        self.evicted_pages += len(freed)
+        return freed
+
+    # ---- introspection -----------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        return sum(1 for _ in self._iter_nodes())
+
+    @property
+    def cached_pages(self) -> List[int]:
+        return [n.page for n in self._iter_nodes()]
+
+    def check_invariants(self):
+        """Structural invariants (property tests): refcounts non-negative,
+        page ids unique, parent/child links consistent."""
+        seen = set()
+        for node in self._iter_nodes():
+            assert node.ref >= 0, "negative refcount"
+            assert node.page >= 0, "tree node without a page"
+            assert node.page not in seen, f"page {node.page} owned twice"
+            seen.add(node.page)
+            assert node.parent.children[node.key] is node
+            assert len(node.key) == self.page_size
+        return seen

@@ -141,6 +141,81 @@ def test_host_syncs_at_most_one_per_chunk(engine):
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill: prompts past the largest bucket extend chunk by chunk
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_matches_single_shot(cfg, engine):
+    """Buckets smaller than the prompt no longer fall back to exact-length
+    compiles: the prompt prefills in bucket-sized chunks (model.extend) and
+    the outputs match the single-bucket engine bit for bit."""
+    small = ServingEngine(cfg, num_slots=3, capacity=96, params=engine.params,
+                          engine_cfg=EngineConfig(prefill_buckets=(32,)))
+    prompts = ["tiny",
+               "a prompt that is comfortably longer than one thirty-two "
+               "token bucket and so must be chunked across extends"]
+    outs = [small.generate(p, max_new_tokens=6) for p in prompts]
+    assert outs == [engine.generate(p, max_new_tokens=6) for p in prompts]
+    s = small.stats()
+    assert s["extend_chunks"] >= 1
+    # compile count stays bounded: one prefill bucket + extend chunk shapes
+    assert s["prefill_compiles"] <= 1
+    assert s["extend_compiles"] <= len(small.buckets) + 1
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-9b", "xlstm-350m",
+                                  "mixtral-8x22b"])
+def test_chunked_prefill_exact_for_stateful_archs(arch):
+    """Extend must resume recurrent / conv / xLSTM state and ring-spliced
+    windowed KV exactly — chunked == single-shot for every cache family."""
+    acfg = ARCHS[arch].reduced(dtype="float32", param_dtype="float32",
+                               vocab_size=512)
+    single = ServingEngine(acfg, num_slots=2, capacity=96)
+    chunked = ServingEngine(acfg, num_slots=2, capacity=96,
+                            params=single.params,
+                            engine_cfg=EngineConfig(prefill_buckets=(32,)))
+    prompts = ["short one",
+               "a much longer prompt crossing the recurrent conv window and "
+               "the local attention window and the bucket boundary at once"]
+    assert [chunked.generate(p, max_new_tokens=6) for p in prompts] == \
+           [single.generate(p, max_new_tokens=6) for p in prompts]
+    assert chunked.stats()["extend_chunks"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# prompt accounting satellites: truncation counter + padding waste
+# ---------------------------------------------------------------------------
+
+
+def test_truncation_recorded_not_silent(cfg):
+    eng = ServingEngine(cfg, num_slots=1, capacity=64)
+    window = eng.capacity - 8 - 1
+    long_prompt = "x" * 200                    # > window tokens, must truncate
+    req = eng.submit(long_prompt, max_new_tokens=8)
+    eng.run_until_drained()
+    assert req.prompt_tokens == window
+    assert req.truncated_tokens > 0
+    s = eng.stats()
+    assert s["truncated_requests"] == 1
+    assert s["truncated_tokens"] == req.truncated_tokens
+    # short prompts don't count
+    req2 = eng.submit("hi", max_new_tokens=4)
+    eng.run_until_drained()
+    assert req2.truncated_tokens == 0
+    assert eng.stats()["truncated_requests"] == 1
+
+
+def test_padding_waste_reported(cfg, engine):
+    eng = ServingEngine(cfg, num_slots=1, capacity=96, params=engine.params)
+    req = eng.submit("abcde", max_new_tokens=4)    # 6 tokens -> 32 bucket
+    eng.run_until_drained()
+    s = eng.stats()
+    assert s["prompt_tokens"] == req.prompt_tokens
+    assert s["prefill_pad_tokens"] == 32 - req.prompt_tokens
+    assert 0.0 < s["prefill_pad_frac"] < 1.0
+
+
+# ---------------------------------------------------------------------------
 # admission guard (satellite): max_new_tokens vs capacity
 # ---------------------------------------------------------------------------
 

@@ -30,6 +30,11 @@ def main():
                     help="paged = KV page pool + radix prefix sharing "
                          "(full-attention archs only); agent turns that "
                          "re-send the conversation prefix skip its prefill")
+    ap.add_argument("--spec-len", type=int, default=0,
+                    help="speculative decode: max draft tokens per verify "
+                         "step from the prompt n-gram lookup drafter "
+                         "(0 = off); copy-heavy agent outputs decode "
+                         "several tokens per forward")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].reduced(dtype="float32", param_dtype="float32",
@@ -37,10 +42,11 @@ def main():
     engine = ServingEngine(cfg, num_slots=args.slots, capacity=192,
                            engine_cfg=EngineConfig(decode_chunk=args.chunk,
                                                    block_w=args.block_w,
-                                                   cache_mode=args.cache_mode))
+                                                   cache_mode=args.cache_mode,
+                                                   spec_len=args.spec_len))
     print(f"engine up: arch={cfg.name} slots={args.slots} "
           f"buckets={list(engine.buckets)} chunk={args.chunk} "
-          f"cache={args.cache_mode}")
+          f"cache={args.cache_mode} spec_len={args.spec_len}")
 
     # 1) raw batched serving
     t0 = time.time()

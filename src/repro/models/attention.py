@@ -231,6 +231,74 @@ def cache_update(k_cache, v_cache, k_new, v_new, cache_len):
 
 
 # ---------------------------------------------------------------------------
+# Speculative verify: S draft tokens per row at PER-ROW positions
+# [cache_lens[b], cache_lens[b]+S) — the batched multi-token decode that
+# scores a whole draft in one forward (serving engine spec path). Linear
+# (non-ring) caches only: rejected-draft K/V beyond the accepted prefix is
+# rolled back for free because every later read masks by cache position, and
+# causality guarantees K/V at accepted positions never depended on rejected
+# tokens. Ring/windowed and recurrent caches need the engine's snapshot +
+# replay path instead (extend with a valid-prefix length).
+# ---------------------------------------------------------------------------
+
+
+def spec_cache_update(k_cache, v_cache, k_new, v_new, cache_lens, valid):
+    """Verify-step write: k_new/v_new [B,S,K,hd] land at positions
+    ``cache_lens[b] + s`` of row b (linear cache). Rows with ``valid[b,s]``
+    False (padded draft tail) are dropped, not written."""
+    B, S = k_new.shape[:2]
+    W = k_cache.shape[1]
+    pos = cache_lens[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    pos = jnp.where(valid, pos, W)               # out of bounds -> dropped
+    rows = jnp.arange(B)[:, None]
+    k_cache = k_cache.at[rows, pos].set(k_new.astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[rows, pos].set(v_new.astype(v_cache.dtype), mode="drop")
+    return k_cache, v_cache
+
+
+def paged_spec_cache_update(pool_k, pool_v, k_new, v_new, block_tables,
+                            cache_lens, valid, page_size: int):
+    """Paged verify-step write: positions route through per-row block tables;
+    invalid rows land on the trash page (kvpool.TRASH_PAGE == 0), the same
+    place block-table padding already sends masked-out decode writes."""
+    B, S = k_new.shape[:2]
+    nbt = block_tables.shape[1]
+    rows = jnp.arange(B)[:, None]
+    pos = cache_lens[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    pi = jnp.clip(pos // page_size, 0, nbt - 1)
+    page = jnp.where(valid, block_tables[rows, pi], 0)
+    off = pos % page_size
+    pool_k = pool_k.at[page, off].set(k_new.astype(pool_k.dtype))
+    pool_v = pool_v.at[page, off].set(v_new.astype(pool_v.dtype))
+    return pool_k, pool_v
+
+
+def spec_attention(q, k_cache, v_cache, cache_lens, *, q_per_kv: int):
+    """Multi-token decode attention for the verify step.
+
+    q [B,S,H,hd] (query s of row b sits at position ``cache_lens[b] + s``)
+    against a linear cache [B,W,K,hd] whose draft K/V is already written;
+    query s attends exactly the positions <= its own, so the math matches S
+    successive ``decode_attention`` calls. S is the draft length + 1 (tiny),
+    so the [S, W] score slab per head stays cheap.
+    """
+    B, S, H, hd = q.shape
+    W = k_cache.shape[1]
+    K = k_cache.shape[2]
+    G = q_per_kv
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgh,bwkh->bkgsw", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    pos_q = cache_lens[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(W)[None, None, :] <= pos_q[:, :, None]      # [B,S,W]
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgsw,bwkh->bskgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Extend (chunked-prefill continuation): a chunk of S new tokens at positions
 # [start, start+S) attends to the already-filled cache prefix + itself
 # ---------------------------------------------------------------------------

@@ -52,8 +52,14 @@ class Model:
 
     def extend(self, params, batch, cache, cache_len, **kw):
         """Prefill continuation against a partially-filled cache (chunked
-        prefill / shared-prefix suffix prefill). See transformer.extend."""
+        prefill / shared-prefix suffix prefill / speculative replay after a
+        partial draft accept). See transformer.extend."""
         return tfm.extend(params, batch, self.cfg, cache, cache_len, **kw)
+
+    def verify(self, params, batch, cache, cache_lens, **kw):
+        """Speculative-decode verify: score all draft positions in one
+        forward, per-row cache lengths. See transformer.verify."""
+        return tfm.verify(params, batch, self.cfg, cache, cache_lens, **kw)
 
     # ---- input construction ------------------------------------------------
     def make_batch(self, tokens_or_frames, *, labels=None, positions=None, start=0):

@@ -110,7 +110,11 @@ def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full", length=None,
 
     x [B,S,D] -> (y [B,S,D], new_cache) with cache {"h": [B,R] f32,
     "conv": [B,W-1,R]}. ``length``/``mask`` mark the valid prefix when the
-    prompt is right-padded to a prefill bucket.
+    prompt is right-padded to a prefill bucket — and double as the
+    speculative-decode rollback mechanism: after a partial draft accept the
+    engine replays the accepted prefix through extend with ``length`` set to
+    it, and the identity-step masking (a=1, input=0 past ``length``; conv
+    state sliced at ``length``) rewinds h and the conv window bit-exactly.
     """
     u = jnp.einsum("bsd,dr->bsr", x, p["wx"])
     gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["wy"]))

@@ -161,6 +161,36 @@ def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len,
             o = decode_attn_fn(q, kc, vc, cache_len, q_per_kv=cfg.q_per_kv,
                                window=window)
         new_cache = {"k": kc, "v": vc}
+    elif mode == "verify":
+        # speculative verify: S draft tokens per row at PER-ROW positions
+        # [cache_len[b], cache_len[b]+S); linear full-attention caches only
+        # (the engine routes windowed/recurrent archs through the per-slot
+        # extend + snapshot/rollback path instead). Writes of the padded
+        # draft tail are dropped; rejected-draft K/V needs no rollback
+        # because later reads mask by cache position and K/V at accepted
+        # positions is causally independent of rejected tokens.
+        if window is not None:
+            raise NotImplementedError(
+                "verify mode needs full (non-windowed) attention; the engine "
+                "uses per-slot extend + snapshot rollback for ring caches")
+        S = k.shape[1]
+        clens = jnp.asarray(cache_len, jnp.int32).reshape(-1)
+        lens = (prefill_len if prefill_len is not None else jnp.int32(S))
+        valid = jnp.arange(S, dtype=jnp.int32)[None, :] < \
+            jnp.reshape(lens, (-1, 1))
+        valid = jnp.broadcast_to(valid, (k.shape[0], S))
+        if block_tables is not None:
+            ps = cache["k"].shape[1]
+            kc, vc = attn.paged_spec_cache_update(
+                cache["k"], cache["v"], k, v, block_tables, clens, valid, ps)
+            o = attn.spec_attention(q, attn.paged_view(kc, block_tables),
+                                    attn.paged_view(vc, block_tables), clens,
+                                    q_per_kv=cfg.q_per_kv)
+        else:
+            kc, vc = attn.spec_cache_update(cache["k"], cache["v"], k, v,
+                                            clens, valid)
+            o = attn.spec_attention(q, kc, vc, clens, q_per_kv=cfg.q_per_kv)
+        new_cache = {"k": kc, "v": vc}
     elif mode == "extend":
         # chunk positions [start, start+S); first `prefill_len` rows valid
         S = k.shape[1]
@@ -254,8 +284,15 @@ def apply_block(kind, p, x, cfg, *, positions, mode, cache, cache_len,
                 block_tables=None):
     """One residual block. Returns (x', new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
+    if mode == "verify" and kind not in (cfgbase.ATTN, cfgbase.ATTN_MOE):
+        # batched verify needs mask-free rollback, which only linear
+        # full-attention caches give; the serving engine speculates on
+        # recurrent / windowed archs through per-slot extend + snapshot
+        raise NotImplementedError(
+            f"verify mode unsupported for {kind!r} layers (per-request "
+            "state needs the snapshot/replay rollback path)")
     rec_mode = mode if mode in ("decode", "extend") else "full"
-    rec_len = prefill_len if mode in ("prefill", "extend") else None
+    rec_len = prefill_len if mode in ("prefill", "extend", "verify") else None
     rec_mask = prefill_mask if mode in ("prefill", "extend") else None
     if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE, cfgbase.LOCAL_ATTN):
         h = apply_norm(p["attn"]["norm"], x, cfg)
@@ -422,15 +459,27 @@ def _inputs_to_x(params, batch, cfg):
 def forward_logits(params, batch, cfg, *, mode="train", cache=None, cache_len=None,
                    decode_attn_fn=None, prefill_len=None, block_tables=None,
                    with_logits=True):
-    """``with_logits=False`` skips final-norm + unembed and returns None
-    logits — intermediate prefill chunks only need the cache side effects,
-    and the unembed is the dominant matmul at real vocab sizes."""
+    """``with_logits`` selects how much of the unembed matmul runs:
+
+    * False    — skip final-norm + unembed, return None logits (intermediate
+                 prefill chunks only need the cache side effects, and the
+                 unembed is the dominant matmul at real vocab sizes).
+    * "last"   — unembed only the position ``prefill_len - 1`` (or the final
+                 position), returning [B, 1, V]: all a prompt's final chunk
+                 needs to seed sampling. Scalar ``prefill_len`` only.
+    * "all" / True — unembed every position, [B, S, V]: the speculative
+                 verify step scores all draft positions from one forward.
+
+    ``prefill_len`` may be a traced scalar (uniform valid prefix — bucketed
+    prefill / extend) or a [B] vector (per-row valid counts — verify mode).
+    """
     x = _inputs_to_x(params, batch, cfg)
     prefill_mask = None
     if prefill_len is not None:
         S = x.shape[1]
+        plen = jnp.reshape(jnp.asarray(prefill_len, jnp.int32), (-1, 1))
         prefill_mask = jnp.broadcast_to(
-            jnp.arange(S, dtype=jnp.int32)[None, :] < prefill_len,
+            jnp.arange(S, dtype=jnp.int32)[None, :] < plen,
             (x.shape[0], S))
     x, new_cache, aux = apply_stack(params, x, cfg, positions=batch["positions"],
                                     mode=mode, cache=cache, cache_len=cache_len,
@@ -441,6 +490,10 @@ def forward_logits(params, batch, cfg, *, mode="train", cache=None, cache_len=No
     if not with_logits:
         return None, new_cache, aux
     x = apply_norm(params["final_norm"], x, cfg)
+    if with_logits == "last":
+        last = (prefill_len - 1 if prefill_len is not None
+                else x.shape[1] - 1)
+        x = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
     logits = unembed(params, x, cfg)
     return logits, new_cache, aux
 
@@ -460,17 +513,22 @@ def train_loss(params, batch, cfg, *, decode_attn_fn=None):
     return loss + aux, {"nll": loss, "aux": aux}
 
 
-def prefill(params, batch, cfg, cache, *, length=None, decode_attn_fn=None):
+def prefill(params, batch, cfg, cache, *, length=None, decode_attn_fn=None,
+            with_logits=True):
     """Fill the cache from a prompt. Returns (logits [B,S,V], cache').
 
     ``length`` (traced scalar, optional): valid prompt length when tokens are
     right-padded to a bucket — recurrent state, conv state, and windowed KV
     caches then match an unpadded prefill of the first ``length`` tokens.
+    ``with_logits="last"`` unembeds only position ``length - 1`` ([B,1,V]) —
+    all the serving engine needs to seed sampling, skipping the other
+    bucket-1 rows of the dominant matmul.
     """
     logits, new_cache, _ = forward_logits(params, batch, cfg, mode="prefill",
                                           cache=cache, cache_len=jnp.zeros((), jnp.int32),
                                           prefill_len=length,
-                                          decode_attn_fn=decode_attn_fn)
+                                          decode_attn_fn=decode_attn_fn,
+                                          with_logits=with_logits)
     return logits, new_cache
 
 
@@ -507,4 +565,25 @@ def extend(params, batch, cfg, cache, cache_len, *, length=None,
                                           decode_attn_fn=decode_attn_fn,
                                           block_tables=block_tables,
                                           with_logits=with_logits)
+    return logits, new_cache
+
+
+def verify(params, batch, cfg, cache, cache_lens, *, lens=None,
+           decode_attn_fn=None, block_tables=None):
+    """Speculative-decode verify: score S draft tokens per row in ONE forward.
+
+    batch tokens [B, S] are ``[last, d_1 .. d_k, pad...]`` per row at per-row
+    positions ``[cache_lens[b], cache_lens[b]+S)``; ``lens`` [B] counts the
+    valid inputs (k+1) — padded-tail cache writes are dropped and padded
+    logits are garbage the acceptance step never reads. Returns
+    (logits [B,S,V], cache'): ``logits[:, i]`` is the target distribution
+    for the token following input i (sampler.accept_batched consumes it).
+    Full-attention archs only; see apply_block's verify gate.
+    """
+    logits, new_cache, _ = forward_logits(params, batch, cfg, mode="verify",
+                                          cache=cache, cache_len=cache_lens,
+                                          prefill_len=lens,
+                                          decode_attn_fn=decode_attn_fn,
+                                          block_tables=block_tables,
+                                          with_logits="all")
     return logits, new_cache

@@ -192,7 +192,9 @@ def apply_mlstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
     ``length``/``mask`` mark the valid prefix under right-padded (bucketed)
     prefill: padded positions get i-gate -> -inf / f-gate -> +large (the same
     trick the chunkwise cell uses for its internal padding), so they neither
-    write to nor decay the (C, n, m) state.
+    write to nor decay the (C, n, m) state. The serving engine's speculative
+    rollback leans on exactly this: replaying an extend with ``length`` set
+    to the accepted draft prefix rewinds the matrix memory bit-exactly.
     """
     H = cfg.num_heads
     u = jnp.einsum("bsd,df->bsf", x, p["w_up"])

@@ -25,6 +25,25 @@ Fast-path structure (see benchmarks/serving_bench.py for the measurements):
   cache). No more silent exact-length fallback past the last bucket; prompts
   truncate only at the hard capacity window, and that truncation is counted
   (``Request.truncated_tokens``, ``stats()["truncated_tokens"]``).
+* **Drafter-free speculative decoding** — ``EngineConfig(spec_len=N)``: a
+  per-slot n-gram lookup over the request's own context (serving/spec.py —
+  no draft model, pure host-side hashing) proposes up to N continuation
+  tokens per engine step; ONE jit'd verify forward (``model.verify``) scores
+  every draft position for every slot at once and ``sampler.accept_batched``
+  commits the accepted prefix plus a correction/bonus token on device.
+  Greedy slots accept by exact match (output bit-identical to
+  non-speculative decode); temperature slots use rejection-sampling
+  acceptance (marginals provably match non-speculative sampling). FAME's
+  copy-heavy outputs (tool results / log lines re-surfaced in answers)
+  accept most drafts, cutting forwards-per-token several-fold
+  (benchmarks/spec_bench.py). Full-attention archs verify batched with
+  mask-free rollback (dense rows or paged block tables — over-written
+  rejected K/V is position-masked until overwritten, and page-granular
+  accounting returns unused pages at finalize); recurrent / conv / xLSTM /
+  ring-KV archs verify per-slot via ``extend`` with a cache-row snapshot
+  spliced back + length-masked replay on partial accept. Slots whose
+  acceptance rate drops below ``spec_min_accept`` stop drafting; steps with
+  no drafts anywhere fall back to the chunked decode loop.
 * **Paged KV + radix prefix sharing** — ``EngineConfig(cache_mode="paged")``
   swaps the dense per-slot cache rows for one pool of fixed-size KV pages
   (serving/kvpool.py) with per-request block tables, indexed by a radix
@@ -35,7 +54,11 @@ Fast-path structure (see benchmarks/serving_bench.py for the measurements):
   prompt sublinear (FAME's context-reuse result, PAPER.md §3.3). Decode
   gathers K/V through the block table (``kernels/paged_decode_attention`` on
   TPU, gather reference on CPU). ``cache_mode="dense"`` keeps the PR-1 path
-  for A/B (benchmarks/prefix_bench.py measures both).
+  for A/B (benchmarks/prefix_bench.py measures both). Admission is
+  radix-aware: queued requests sharing the just-admitted prompt's first
+  radix block move (stably) to the queue front so one engine step admits
+  the whole group while the shared pages are pinned and hot
+  (``stats()["grouped_admissions"]``).
 
 On CPU it runs reduced configs end-to-end (agents in examples/serve_agents.py
 talk to it); on the production mesh the same functions lower through
@@ -54,7 +77,8 @@ import jax.numpy as jnp
 from repro.models import Model
 from repro.serving import kvpool
 from repro.serving.radix import RadixTree
-from repro.serving.sampler import sample_batched
+from repro.serving.sampler import accept_batched, sample_batched
+from repro.serving.spec import NgramDrafter
 from repro.serving.tokenizer import ByteTokenizer
 
 
@@ -125,6 +149,20 @@ class EngineConfig:
     num_pages:       device pages in the pool (None → auto: trash page +
                      2 × num_slots × pages-per-request, leaving headroom for
                      retained prefixes before LRU eviction kicks in).
+    spec_len:        max draft tokens per speculative verify step (0 = off).
+                     A per-slot n-gram lookup drafter (serving/spec.py, no
+                     draft model) proposes continuations; one verify forward
+                     scores every draft position at once and an accept/
+                     rollback step commits the matched prefix. Greedy slots
+                     accept by exact match (outputs bit-identical to
+                     non-speculative decode); temperature slots use
+                     rejection-sampling acceptance (distribution-correct).
+    spec_ngram_min/max: suffix n-gram lengths the drafter indexes.
+    spec_min_accept: per-slot drafting turns off for the rest of a request
+                     once its acceptance rate drops below this (after
+                     spec_warmup drafted tokens) — unpredictable outputs
+                     then pay zero verify overhead.
+    spec_warmup:     drafted tokens per slot before adaptive disable engages.
     """
     prefill_buckets: Optional[Tuple[int, ...]] = None
     decode_chunk: int = 16
@@ -133,6 +171,11 @@ class EngineConfig:
     cache_mode: str = "dense"
     page_size: int = 16
     num_pages: Optional[int] = None
+    spec_len: int = 0
+    spec_ngram_min: int = 2
+    spec_ngram_max: int = 4
+    spec_min_accept: float = 0.35
+    spec_warmup: int = 64
 
 
 @dataclasses.dataclass
@@ -155,6 +198,8 @@ class Request:
     _submit_t: float = 0.0
     _ids: Optional[list] = None    # tokenized prompt, cached across admission
                                    # retries (paged head-of-line waits)
+    _grouped: bool = False         # moved up the queue by radix-aware
+                                   # admission batching (paged mode)
 
 
 @dataclasses.dataclass
@@ -168,6 +213,11 @@ class _Slot:
     pages_shared: Optional[list] = None   # radix-matched prefix pages (tree-owned)
     pages_priv: Optional[list] = None     # this request's own pages
     node: Optional[object] = None         # pinned radix node
+    # speculative decoding bookkeeping
+    drafter: Optional[NgramDrafter] = None
+    spec_on: bool = False                 # adaptive per-slot enable
+    spec_drafted: int = 0                 # draft tokens proposed for this slot
+    spec_accepted: int = 0                # ... of which verify accepted
 
 
 class ServingEngine:
@@ -183,6 +233,24 @@ class ServingEngine:
         if mode not in ("dense", "paged"):
             raise ValueError(f"cache_mode must be 'dense' or 'paged', got {mode!r}")
         self.paged = mode == "paged"
+        if self.engine_cfg.spec_len < 0:
+            raise ValueError(
+                f"spec_len must be >= 0, got {self.engine_cfg.spec_len}")
+        self.spec = self.engine_cfg.spec_len > 0
+        if self.spec:
+            if cfg.modality != "text":
+                raise ValueError(
+                    "speculative decoding needs token-id inputs; "
+                    f"modality={cfg.modality!r} has no n-gram stream to draft "
+                    "from")
+            # batched verify needs mask-free draft rollback, which only
+            # linear full-attention caches give — the same predicate that
+            # makes KV pages shareable. Other archs (recurrent / conv /
+            # xLSTM state, ring KV) speculate per-slot via extend with a
+            # pre-verify snapshot spliced back on partial accept.
+            self._spec_batched = kvpool.supports_paged(cfg)[0]
+        else:
+            self._spec_batched = False
         bw = max(1, self.engine_cfg.block_w)
         if capacity > bw:
             capacity = -(-capacity // bw) * bw      # align to kernel block
@@ -240,6 +308,10 @@ class ServingEngine:
         self._pad_tokens = 0                     # prefill bucket padding waste
         self._prompt_tokens = 0                  # real (unpadded) prompt tokens
         self._prefix_hit_tokens = 0              # paged: served from shared pages
+        self._draft_tokens = 0                   # spec: tokens proposed
+        self._accepted_tokens = 0                # spec: drafts verify accepted
+        self._verify_steps = 0                   # spec: verify forwards run
+        self._grouped_admissions = 0             # paged: radix-grouped admits
 
         donate = self.engine_cfg.donate
         if donate is None:
@@ -253,6 +325,12 @@ class ServingEngine:
         self._jit_extend_paged = jax.jit(self._extend_paged_fn,
                                          donate_argnums=dargs,
                                          static_argnames=("sample",))
+        if self.spec:
+            self._jit_verify = jax.jit(self._verify_fn, donate_argnums=dargs)
+            # per-slot path: the snapshot row must survive the verify call,
+            # so the verify extend never donates its cache argument
+            self._jit_spec_extend = jax.jit(self._spec_extend_fn)
+            self._jit_accept = jax.jit(self._accept_fn)
 
     # ---- jit'd computations ------------------------------------------------
     def _prefill_fn(self, params, cache, tokens, positions, slot, length, key,
@@ -265,16 +343,21 @@ class ServingEngine:
         cache1 = self.model.init_cache(1, self.capacity)
         batch = {("frames" if self.cfg.modality == "audio_frames" else "tokens"): tokens,
                  "positions": positions}
-        logits, cache1 = self.model.prefill(params, batch, cache1, length=length)
+        logits, cache1 = self.model.prefill(params, batch, cache1,
+                                            length=length, with_logits="last")
         tok = self._sample_last(logits, length, key, temperature, top_k)
         # splice the single-row cache into slot `slot` of the shared cache;
         # scan caches are [L, B, ...] (batch dim 1), tail caches [B, ...]
         return _slot_splice(cache, cache1, slot), tok
 
     def _sample_last(self, logits, length, key, temperature, top_k):
-        """Sample one token from the logits at position ``length - 1``."""
-        last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
-                                            keepdims=False)          # [1, V]
+        """Sample one token from the logits at position ``length - 1``
+        (or from already-sliced ``with_logits="last"`` logits [B, 1, V])."""
+        if logits.shape[1] == 1:
+            last = logits[:, 0]                                      # [1, V]
+        else:
+            last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
+                                                keepdims=False)      # [1, V]
         tok = sample_batched(last, key, temperature=temperature[None],
                              top_k=top_k[None], vocab_limit=self.cfg.vocab_size)
         return tok[0]
@@ -293,8 +376,9 @@ class ServingEngine:
         cache1 = _slot_extract(cache, slot)
         tok_key = ("frames" if self.cfg.modality == "audio_frames" else "tokens")
         batch = {tok_key: tokens, "positions": positions}
-        logits, cache1 = self.model.extend(params, batch, cache1, start,
-                                           length=length, with_logits=sample)
+        logits, cache1 = self.model.extend(
+            params, batch, cache1, start, length=length,
+            with_logits="last" if sample else False)
         tok = (self._sample_last(logits, length, key, temperature, top_k)
                if sample else jnp.int32(-1))
         return _slot_splice(cache, cache1, slot), tok
@@ -306,9 +390,9 @@ class ServingEngine:
         the radix-matched prefix is never recomputed)."""
         tok_key = ("frames" if self.cfg.modality == "audio_frames" else "tokens")
         batch = {tok_key: tokens, "positions": positions}
-        logits, pool = self.model.extend(params, batch, pool, start,
-                                         length=length, block_tables=bt,
-                                         with_logits=sample)
+        logits, pool = self.model.extend(
+            params, batch, pool, start, length=length, block_tables=bt,
+            with_logits="last" if sample else False)
         tok = (self._sample_last(logits, length, key, temperature, top_k)
                if sample else jnp.int32(-1))
         return pool, tok
@@ -365,6 +449,50 @@ class ServingEngine:
             jax.lax.while_loop(cond, body, st)
         return cache, tok_buf, emit_buf, cache_lens, remaining, done
 
+    # ---- speculative decode (drafter-free): jit'd verify + accept ----------
+    def _verify_fn(self, params, cache, tokens, clens, lens, temps, top_ks,
+                   key, block_tables=None):
+        """One batched speculative verify step for every slot.
+
+        tokens [B, S]: ``[last, d_1 .. d_k, pad]`` per row (S = spec_len+1),
+        lens [B] = k+1 valid inputs (0 for rows sitting this verify out —
+        empty, done, or undrafted slots: no writes, no commits; undrafted
+        slots take the chunked decode loop this step instead). One forward
+        scores all draft positions; accept_batched commits the matched
+        prefix + a correction/bonus token per drafted row.
+        """
+        positions = clens[:, None] + jnp.arange(tokens.shape[1],
+                                                dtype=jnp.int32)[None, :]
+        batch = {"tokens": tokens, "positions": positions}
+        logits, cache = self.model.verify(params, batch, cache, clens,
+                                          lens=lens,
+                                          block_tables=block_tables)
+        out_tok, out_len = accept_batched(
+            logits, tokens, jnp.maximum(lens - 1, 0), key,
+            temperature=temps, top_k=top_ks,
+            vocab_limit=self.cfg.vocab_size, use_kernel=self.cfg.use_pallas)
+        return cache, out_tok, out_len
+
+    def _spec_extend_fn(self, params, cache, tokens, positions, slot, start,
+                        length):
+        """Per-slot verify for stateful archs (recurrent / conv / xLSTM /
+        ring KV): run ``extend`` over the draft chunk with per-position
+        logits. The caller snapshots the slot's cache row first; on partial
+        accept it splices the snapshot back and replays only the accepted
+        prefix (``_jit_extend`` with the real length), which the valid-prefix
+        masking in models/{rglru,xlstm,attention} makes bit-exact."""
+        cache1 = _slot_extract(cache, slot)
+        batch = {"tokens": tokens, "positions": positions}
+        logits, cache1 = self.model.extend(params, batch, cache1, start,
+                                           length=length, with_logits="all")
+        return _slot_splice(cache, cache1, slot), logits
+
+    def _accept_fn(self, logits, tokens, draft_lens, key, temps, top_ks):
+        return accept_batched(logits, tokens, draft_lens, key,
+                              temperature=temps, top_k=top_ks,
+                              vocab_limit=self.cfg.vocab_size,
+                              use_kernel=self.cfg.use_pallas)
+
     # ---- public API -----------------------------------------------------------
     def submit(self, prompt: str, *, max_new_tokens: int = 64,
                temperature: float = 0.0, top_k: int = 0) -> Request:
@@ -417,6 +545,16 @@ class ServingEngine:
             "prefill_pad_frac": self._pad_tokens /
                 max(self._pad_tokens + self._prompt_tokens
                     - self._prefix_hit_tokens, 1),
+            # speculative decode (all zero when spec_len == 0): drafted vs
+            # verify-accepted tokens, and how many verify forwards ran —
+            # acceptance_rate is the knob for tuning spec_len / the n-gram
+            # range from bench JSON (benchmarks/spec_bench.py)
+            "spec_len": self.engine_cfg.spec_len,
+            "draft_tokens": self._draft_tokens,
+            "accepted_tokens": self._accepted_tokens,
+            "acceptance_rate": self._accepted_tokens /
+                max(self._draft_tokens, 1),
+            "verify_steps": self._verify_steps,
         }
         if self.paged:
             out.update({
@@ -431,6 +569,10 @@ class ServingEngine:
                 "prefix_hit_tokens": self._prefix_hit_tokens,
                 "prefix_hit_rate": self._prefix_hit_tokens /
                     max(self._prompt_tokens, 1),
+                # queued requests admitted in the same engine step as an
+                # earlier request sharing their first radix block (the
+                # shared pages are matched while still pinned/hot)
+                "grouped_admissions": self._grouped_admissions,
             })
         return out
 
@@ -519,6 +661,7 @@ class ServingEngine:
         slot.cache_len = len(ids)
         slot.remaining = req.max_new_tokens - 1
         slot.generated = [int(first)]                     # one host sync
+        self._arm_spec(slot, ids)
         self._prefill_syncs += 1
         return True
 
@@ -576,9 +719,48 @@ class ServingEngine:
         slot.pages_shared = shared
         slot.pages_priv = priv
         slot.node = node
+        self._arm_spec(slot, ids)
         self._bt_device = None          # slot membership changed
         self._prefill_syncs += 1
+        self._group_queue(ids)
         return True
+
+    def _arm_spec(self, slot: _Slot, ids: List[int]):
+        """Index the request's context for the n-gram drafter (prompt + the
+        first sampled token; decode/verify commits extend it)."""
+        if not self.spec:
+            return
+        slot.drafter = NgramDrafter(ids + slot.generated,
+                                    n_min=self.engine_cfg.spec_ngram_min,
+                                    n_max=self.engine_cfg.spec_ngram_max)
+        slot.spec_on = True
+
+    def _group_queue(self, ids: List[int]):
+        """Radix-aware admission batching (paged): stable-move queued
+        requests whose (truncated) prompt shares the just-admitted prompt's
+        first radix block to the queue front, so the remaining free slots of
+        THIS engine step admit them while the shared prefix pages are pinned
+        and hot — N agents sharing a system prompt prefill it once and join
+        the same decode batch. FIFO order survives within the group and the
+        remainder."""
+        ps = self.engine_cfg.page_size
+        # queue[0] is the request being admitted right now — skip it
+        if len(ids) < ps or len(self._queue) < 2:
+            return
+        head = tuple(ids[:ps])
+        grouped, rest = [], []
+        for r in list(self._queue)[1:]:
+            if r._ids is None:
+                r._ids = self.tokenizer.encode(r.prompt)
+            rids = r._ids[-(self.capacity - r.max_new_tokens - 1):]
+            if len(rids) >= ps and tuple(rids[:ps]) == head:
+                r._grouped = True
+                grouped.append(r)
+            else:
+                rest.append(r)
+        if grouped:
+            self._queue = collections.deque(
+                [self._queue[0]] + grouped + rest)
 
     def _admit(self):
         """Prefill queued requests into free slots (continuous batching).
@@ -603,9 +785,16 @@ class ServingEngine:
                         f"page_size={self.engine_cfg.page_size})")
                 break
             self._queue.popleft()
+            if req._grouped:
+                self._grouped_admissions += 1
+                req._grouped = False
             req.admit_index = self._next_admit
             self._next_admit += 1
             req.prefill_s += time.perf_counter() - t0
+        # grouping credit is same-step only: a sharer still queued when the
+        # round ends admits later on its own (the pinned pages may be gone)
+        for r in self._queue:
+            r._grouped = False
 
     def _active(self):
         return [i for i, s in enumerate(self.slots) if s.request is not None]
@@ -632,21 +821,197 @@ class ServingEngine:
             self._bt_device = None      # slot membership changed
         self.slots[si] = _Slot()
 
+    # ---- speculative decode pass -------------------------------------------
+    def _spec_pass(self, active) -> set:
+        """One speculative verify pass, interleaved with the chunked-decode
+        loop: slots whose drafter has a proposal verify it this step; the
+        returned set sits out the decode chunk. Falls back to plain chunked
+        decode (empty set) when no slot has a draft, so non-copyable
+        workloads pay nothing but the host-side n-gram lookups."""
+        eos = self.tokenizer.eos_id
+        live = []
+        for i in active:
+            s = self.slots[i]
+            # same conditions the decode loop's entry done-mask would catch
+            if (s.remaining <= 0 or s.cache_len >= self.capacity - 1
+                    or s.generated[-1] == eos):
+                self._finalize(i)
+                continue
+            live.append(i)
+        if not live:
+            return set(active)
+        drafts = {}
+        for i in live:
+            s = self.slots[i]
+            d = []
+            if s.spec_on:
+                # the +1 correction/bonus token must fit the budget and the
+                # capacity window, and draft writes must stay in bounds
+                cap = min(self.engine_cfg.spec_len, s.remaining - 1,
+                          self.capacity - 2 - s.cache_len)
+                if cap > 0:
+                    d = s.drafter.draft(cap)
+            drafts[i] = d
+        drafted = [i for i in live if drafts[i]]
+        if not drafted:
+            return set()
+        # only drafted slots verify; the rest keep the chunked decode loop
+        # (a disabled or draftless slot must not degrade to one-token steps)
+        if self._spec_batched:
+            self._spec_step_batched(drafted, drafts)
+        else:
+            self._spec_step_perslot(drafted, drafts)
+        return set(drafted)
+
+    def _spec_step_batched(self, live, drafts):
+        """Full-attention archs: ONE jit'd verify forward scores every
+        drafted slot's proposal at once (rows of undrafted slots carry
+        lens=0 — no reads, no writes, no commit); rollback is free —
+        rejected-draft K/V is masked by cache position until overwritten."""
+        t0 = time.perf_counter()
+        S = self.engine_cfg.spec_len + 1
+        tok_rows = [[0] * S for _ in range(self.num_slots)]
+        lens = [0] * self.num_slots
+        for i in live:
+            s = self.slots[i]
+            row = [s.generated[-1]] + drafts[i]
+            lens[i] = len(row)
+            tok_rows[i][:len(row)] = row
+        tokens = jnp.asarray(tok_rows, jnp.int32)
+        lens_a = jnp.asarray(lens, jnp.int32)
+        clens = jnp.asarray([s.cache_len for s in self.slots], jnp.int32)
+        # the same greedy/temps/top-k static specialization as the decode loop
+        sampling = any(self.slots[i].request.temperature > 0.0 for i in live)
+        temps = (jnp.asarray([s.request.temperature if s.request else 0.0
+                              for s in self.slots], jnp.float32)
+                 if sampling else None)
+        top_ks = (jnp.asarray([s.request.top_k if s.request else 0
+                               for s in self.slots], jnp.int32)
+                  if sampling and any(self.slots[i].request.top_k > 0
+                                      for i in live)
+                  else None)
+        self._rng, k = jax.random.split(self._rng)
+        bt = None
+        if self.paged:
+            if self._bt_device is None:
+                self._bt_device = kvpool.block_table_array(
+                    [(s.pages_shared + s.pages_priv) if s.request else []
+                     for s in self.slots], self._bt_width)
+            bt = self._bt_device
+        self.cache, out_tok, out_len = self._jit_verify(
+            self.params, self.cache, tokens, clens, lens_a, temps, top_ks,
+            k, bt)
+        # the ONE host sync of the verify step
+        out_tok, out_len = jax.device_get((out_tok, out_len))
+        self._decode_syncs += 1
+        self._verify_steps += 1
+        dt = time.perf_counter() - t0
+        for i in live:
+            self._commit_spec(i, drafts[i], out_tok[i], int(out_len[i]),
+                              dt / len(live))
+
+    def _spec_step_perslot(self, idxs, drafts):
+        """Stateful archs (recurrent / conv / xLSTM state, ring KV): verify
+        via ``extend`` one slot at a time with a pre-verify cache-row
+        snapshot. Full accept commits the extend as-is; partial accept
+        splices the snapshot back and replays only the accepted prefix —
+        the valid-prefix masking in models/{rglru,xlstm,attention} makes the
+        rewound state bit-exact, at the cost of one extra (cheap, logit-free)
+        extend on the rollback path."""
+        S = self.engine_cfg.spec_len + 1
+        pad = self.tokenizer.pad_id
+        for i in idxs:
+            t0 = time.perf_counter()
+            slot = self.slots[i]
+            d = drafts[i]
+            row = [slot.generated[-1]] + d
+            n_in = len(row)
+            tokens = jnp.asarray([row + [pad] * (S - n_in)], jnp.int32)
+            start = slot.cache_len
+            positions = start + jnp.arange(S, dtype=jnp.int32)[None, :]
+            snap = _slot_extract(self.cache, i)      # pre-verify checkpoint
+            self.cache, logits = self._jit_spec_extend(
+                self.params, self.cache, tokens, positions, jnp.int32(i),
+                jnp.int32(start), jnp.int32(n_in))
+            req = slot.request
+            sampling = req.temperature > 0.0
+            temps = (jnp.asarray([req.temperature], jnp.float32)
+                     if sampling else None)
+            top_ks = (jnp.asarray([req.top_k], jnp.int32)
+                      if sampling and req.top_k > 0 else None)
+            self._rng, k = jax.random.split(self._rng)
+            out_tok, out_len = self._jit_accept(
+                logits, tokens, jnp.asarray([n_in - 1], jnp.int32), k,
+                temps, top_ks)
+            out_tok, out_len = jax.device_get((out_tok, out_len))
+            n = int(out_len[0])
+            self._decode_syncs += 1
+            self._verify_steps += 1
+            if n < n_in:
+                # partial accept: restore the checkpoint, replay the
+                # accepted prefix only (length-masked extend, no logits)
+                self.cache = _slot_splice(self.cache, snap, i)
+                self._rng, k2 = jax.random.split(self._rng)
+                self.cache, _ = self._jit_extend(
+                    self.params, self.cache, tokens, positions, jnp.int32(i),
+                    jnp.int32(start), jnp.int32(n), k2, jnp.float32(0.0),
+                    jnp.int32(0), sample=False)
+            self._commit_spec(i, d, out_tok[0], n,
+                              time.perf_counter() - t0)
+
+    def _commit_spec(self, si, draft, out_row, n, dt):
+        """Commit one slot's verify outcome: n = accepted drafts + 1
+        correction/bonus token, truncated at the first EOS."""
+        slot = self.slots[si]
+        eos = self.tokenizer.eos_id
+        emitted = [int(t) for t in out_row[:n]]
+        for j, t in enumerate(emitted):
+            if t == eos:
+                emitted = emitted[:j + 1]
+                break
+        slot.generated.extend(emitted)
+        slot.drafter.extend(emitted)
+        slot.cache_len += len(emitted)
+        slot.remaining -= len(emitted)
+        slot.spec_drafted += len(draft)
+        slot.spec_accepted += n - 1
+        self._draft_tokens += len(draft)
+        self._accepted_tokens += n - 1
+        self._decode_tokens += len(emitted)
+        slot.request.decode_s += dt
+        ecfg = self.engine_cfg
+        if (slot.spec_on and slot.spec_drafted >= ecfg.spec_warmup
+                and slot.spec_accepted <
+                ecfg.spec_min_accept * slot.spec_drafted):
+            slot.spec_on = False        # this request isn't n-gram-predictable
+        if (slot.remaining <= 0 or slot.generated[-1] == eos
+                or slot.cache_len >= self.capacity - 1):
+            self._finalize(si)
+
     def step(self):
-        """One engine iteration: admit + one chunked decode for all slots."""
+        """One engine iteration: admit, then one speculative verify pass for
+        slots with drafts (when spec is on) and/or one chunked decode for
+        the rest."""
         self._admit()
         active = self._active()
         if not active:
             return False
+        handled = self._spec_pass(active) if self.spec else set()
+        rest = [i for i in self._active() if i not in handled]
+        if not rest:
+            return True
         t0 = time.perf_counter()
         last = jnp.asarray([s.generated[-1] if s.request else 0
                             for s in self.slots], jnp.int32)
         clens = jnp.asarray([s.cache_len for s in self.slots], jnp.int32)
         rem = jnp.asarray([s.remaining for s in self.slots], jnp.int32)
-        done = jnp.asarray([s.request is None or s.remaining <= 0
+        # spec-handled slots sit this chunk out via the done mask (they
+        # already advanced up to spec_len+1 tokens this step)
+        done = jnp.asarray([i in handled or s.request is None
+                            or s.remaining <= 0
                             or s.cache_len >= self.capacity - 1
                             or s.generated[-1] == self.tokenizer.eos_id
-                            for s in self.slots], bool)
+                            for i, s in enumerate(self.slots)], bool)
         # static specialization: an all-greedy batch (the common agent case)
         # compiles a loop body with no RNG split / categorical / top-k sort —
         # jit re-specializes on the None-vs-array structure, so at most three
@@ -686,16 +1051,18 @@ class ServingEngine:
         dt = time.perf_counter() - t0
 
         emitted = 0
-        for i in active:
+        for i in rest:
             slot = self.slots[i]
             new = tok_buf[:, i][emit_buf[:, i]]
             slot.generated.extend(int(t) for t in new)
+            if slot.drafter is not None and new.size:
+                slot.drafter.extend([int(t) for t in new])
             emitted += int(new.size)
             slot.cache_len = int(clens_h[i])
             slot.remaining = int(rem_h[i])
-            slot.request.decode_s += dt / max(len(active), 1)
+            slot.request.decode_s += dt / max(len(rest), 1)
         self._decode_tokens += emitted
-        for i in active:
+        for i in rest:
             if bool(done_h[i]):
                 self._finalize(i)
         return True

@@ -262,3 +262,45 @@ def test_sample_batched_per_row_params():
         out = sample_batched(logits, jax.random.PRNGKey(s),
                              temperature=jnp.full((3,), 50.0), vocab_limit=4)
         assert int(out.max()) < 4
+
+
+def test_sample_batched_topk_ge_vocab_is_no_filter():
+    """top_k >= V must degenerate to an unfiltered sample (the k-th largest
+    is then the global minimum; the V - k index is clipped, never negative),
+    bit-identical to top_k=0 under the same key."""
+    import jax
+    key = jax.random.PRNGKey(7)
+    logits = jax.random.normal(key, (4, 5))
+    temps = jnp.full((4,), 1.3)
+    ref = sample_batched(logits, key, temperature=temps,
+                         top_k=jnp.zeros(4, jnp.int32))
+    for k in (5, 6, 100):
+        out = sample_batched(logits, key, temperature=temps,
+                             top_k=jnp.full((4,), k, jnp.int32))
+        assert out.tolist() == ref.tolist(), k
+    # mixed rows: only the filtered row may differ from no-filter
+    mixed = sample_batched(logits, key, temperature=temps,
+                           top_k=jnp.asarray([1, 9, 0, 5], jnp.int32))
+    assert mixed[1:].tolist() == ref[1:].tolist()
+    assert int(mixed[0]) == int(jnp.argmax(logits[0]))      # top-1 == argmax
+
+
+def test_sample_batched_topk_composes_with_vocab_limit():
+    """vocab_limit masks ids to -inf BEFORE top-k: a top_k spanning the
+    whole limited vocab equals vocab-limit-only sampling, and masked ids are
+    never produced even when top_k counts past them."""
+    import jax
+    key = jax.random.PRNGKey(11)
+    logits = jax.random.normal(key, (3, 8))
+    temps = jnp.full((3,), 2.0)
+    ref = sample_batched(logits, key, temperature=temps, vocab_limit=3,
+                         top_k=jnp.zeros(3, jnp.int32))
+    for k in (3, 7, 8, 50):                # k >= effective vocab -> no filter
+        out = sample_batched(logits, key, temperature=temps, vocab_limit=3,
+                             top_k=jnp.full((3,), k, jnp.int32))
+        assert out.tolist() == ref.tolist(), k
+    for s in range(6):                     # masked ids never sampled
+        out = sample_batched(logits, jax.random.PRNGKey(s),
+                             temperature=jnp.full((3,), 50.0), vocab_limit=3,
+                             top_k=jnp.full((3,), 6, jnp.int32))
+        assert int(out.max()) < 3

@@ -1,0 +1,465 @@
+"""Drafter-free speculative decoding: n-gram drafter, batched accept
+(greedy exact-match + rejection sampling), verify-mode forward vs per-token
+decode, engine spec-vs-baseline equivalence (incl. recurrent/ring rollback),
+paged page-leak freedom, and radix-aware admission grouping."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.kernels.spec_scan import accept_len, accept_len_ref
+from repro.models import Model
+from repro.models import attention as attn
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.sampler import accept_batched, sample_batched
+from repro.serving.spec import NgramDrafter
+
+from tests._hypothesis_compat import given, settings, st
+
+
+def _cfg(arch, **over):
+    return ARCHS[arch].reduced(dtype="float32", param_dtype="float32",
+                               vocab_size=512, **over)
+
+
+# ---------------------------------------------------------------------------
+# n-gram drafter
+# ---------------------------------------------------------------------------
+
+
+def test_drafter_lookup_and_self_extension():
+    d = NgramDrafter([1, 2, 3, 4, 9, 1, 2, 3], n_min=2, n_max=3)
+    # suffix (2,3) (and (1,2,3)) occurred before, continuation 4, 9, ...
+    assert d.draft(2) == [4, 9]
+    # self-extension: the chained lookup keeps drafting past the first span
+    assert d.draft(5) == [4, 9, 1, 2, 3]
+    assert d.draft(0) == []
+
+
+def test_drafter_never_matches_itself():
+    # the suffix's only occurrence is itself -> no draft
+    assert NgramDrafter([5, 6, 7, 8], n_min=2, n_max=4).draft(4) == []
+    # a period-1 loop drafts indefinitely via self-extension
+    d = NgramDrafter([3, 7, 7, 7], n_min=2, n_max=4)
+    assert d.draft(6) == [7] * 6
+
+
+def test_drafter_incremental_extend_matches_fresh_build():
+    seq = [1, 2, 3, 1, 2, 4, 1, 2, 3, 1]
+    inc = NgramDrafter(seq[:4])
+    for t in seq[4:]:
+        inc.extend([t])
+    fresh = NgramDrafter(seq)
+    assert inc._map == fresh._map
+    assert inc.draft(4) == fresh.draft(4)
+
+
+# ---------------------------------------------------------------------------
+# accept_batched: greedy exact-match semantics
+# ---------------------------------------------------------------------------
+
+
+def _onehotish(rows, V=16):
+    """Logits whose argmax sequence per row is ``rows``."""
+    return jnp.stack([jax.nn.one_hot(jnp.asarray(r), V) * 5.0 for r in rows])
+
+
+def test_accept_greedy_full_accept_plus_bonus():
+    # target argmaxes: 7, 3, 9 ; drafts d1=7, d2=3 -> both accepted, bonus 9
+    logits = _onehotish([[7, 3, 9]])
+    inputs = jnp.asarray([[1, 7, 3]], jnp.int32)
+    out, n = accept_batched(logits, inputs, jnp.asarray([2]), None,
+                            temperature=None)
+    assert n.tolist() == [3]
+    assert out[0, :3].tolist() == [7, 3, 9]
+
+
+def test_accept_greedy_reject_emits_correction():
+    # d1=7 accepted, d2=5 != argmax 3 -> rejected, correction = 3
+    logits = _onehotish([[7, 3, 9]])
+    inputs = jnp.asarray([[1, 7, 5]], jnp.int32)
+    out, n = accept_batched(logits, inputs, jnp.asarray([2]), None,
+                            temperature=None)
+    assert n.tolist() == [2]
+    assert out[0, :2].tolist() == [7, 3]
+
+
+def test_accept_zero_draft_is_plain_decode_step():
+    logits = _onehotish([[4, 0, 0], [2, 0, 0]])
+    inputs = jnp.asarray([[1, 0, 0], [3, 0, 0]], jnp.int32)
+    out, n = accept_batched(logits, inputs, jnp.asarray([0, 0]), None,
+                            temperature=None)
+    assert n.tolist() == [1, 1]
+    assert out[:, 0].tolist() == [4, 2]
+    # matches sample_batched on the same logits
+    ref = sample_batched(logits[:, 0], None, temperature=None)
+    assert out[:, 0].tolist() == ref.tolist()
+
+
+def test_accept_vocab_limit_respected():
+    logits = jnp.zeros((1, 2, 16)).at[0, :, 13].set(9.0)   # argmax beyond limit
+    inputs = jnp.asarray([[1, 2]], jnp.int32)
+    out, n = accept_batched(logits, inputs, jnp.asarray([1]), None,
+                            temperature=None, vocab_limit=8)
+    assert int(out[0, 0]) < 8
+
+
+# ---------------------------------------------------------------------------
+# accept_batched: rejection sampling is distribution-correct
+# ---------------------------------------------------------------------------
+
+
+def _marginal(logits_row, draft_tok, temperature, top_k, n=4000):
+    """Empirical distribution of the FIRST emitted token when ``draft_tok``
+    is proposed against target logits ``logits_row``."""
+    logits = jnp.asarray(logits_row, jnp.float32)[None, None, :]
+    logits = jnp.concatenate([logits, jnp.zeros_like(logits)], axis=1)
+    inputs = jnp.asarray([[0, draft_tok]], jnp.int32)
+    temps = jnp.asarray([temperature], jnp.float32)
+    ks = None if top_k is None else jnp.asarray([top_k], jnp.int32)
+
+    def one(key):
+        out, _ = accept_batched(logits, inputs, jnp.asarray([1]), key,
+                                temperature=temps, top_k=ks)
+        return out[0, 0]
+
+    toks = jax.jit(jax.vmap(one))(jax.random.split(jax.random.PRNGKey(0), n))
+    V = logits.shape[-1]
+    return jnp.bincount(toks, length=V) / n
+
+
+def test_rejection_sampling_marginals_match_target():
+    """Fixed-seed statistical check (ISSUE 3 acceptance criterion): with a
+    deterministic drafter, accept-with-prob-p(d) + renormalized-residual
+    resampling leaves every per-token marginal equal to non-speculative
+    sampling — whether the draft is likely, unlikely, or top-k-excluded."""
+    logits_row = [1.0, 2.0, 0.5, -0.5, 1.5, 0.0, -1.0, 0.7]
+    target = jax.nn.softmax(jnp.asarray(logits_row))
+    for d in (1, 6):                       # likely and unlikely draft
+        emp = _marginal(logits_row, d, 1.0, None)
+        assert float(jnp.max(jnp.abs(emp - target))) < 0.03, (d, emp, target)
+    # with top-k filtering the target is the renormalized top-3; draft 6 is
+    # outside the filter (p=0 -> always rejected, residual == target)
+    scaled = jnp.asarray(logits_row)
+    kth = jnp.sort(scaled)[-3]
+    t3 = jax.nn.softmax(jnp.where(scaled >= kth, scaled, -1e30))
+    for d in (1, 6):
+        emp = _marginal(logits_row, d, 1.0, 3)
+        assert float(jnp.max(jnp.abs(emp - t3))) < 0.03, (d, emp, t3)
+
+
+# ---------------------------------------------------------------------------
+# fused accept-length scan kernel (interpret mode) vs reference
+# ---------------------------------------------------------------------------
+
+
+def test_accept_len_kernel_matches_ref():
+    key = jax.random.PRNGKey(3)
+    acc = jax.random.bernoulli(key, 0.6, (5, 9))
+    lens = jnp.asarray([0, 3, 8, 8, 5], jnp.int32)
+    out = accept_len(acc, lens)
+    ref = accept_len_ref(acc, lens)
+    assert out.tolist() == ref.tolist()
+    # directed edges: all-accept hits the len cap; first-reject cuts to 0
+    assert accept_len(jnp.ones((1, 4), bool), jnp.asarray([3])).tolist() == [3]
+    assert accept_len(jnp.zeros((1, 4), bool), jnp.asarray([3])).tolist() == [0]
+
+
+# ---------------------------------------------------------------------------
+# verify-mode forward == sequential decode steps (logits and cache writes)
+# ---------------------------------------------------------------------------
+
+
+def test_verify_logits_match_sequential_decode():
+    cfg = _cfg("qwen2.5-3b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    P, S, cap = 11, 5, 64
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (1, P + S), 0, cfg.vocab_size)
+    cache = model.init_cache(1, cap)
+    _, cache = model.prefill(params, model.make_batch(toks[:, :P]), cache,
+                             length=jnp.int32(P))
+    vb = model.make_batch(toks[:, P:], start=P)
+    logits_v, cache_v = model.verify(params, vb, cache,
+                                     jnp.asarray([P], jnp.int32),
+                                     lens=jnp.asarray([S], jnp.int32))
+    ref, c = [], cache
+    for i in range(S):
+        lg, c = model.decode_step(params,
+                                  model.make_batch(toks[:, P + i:P + i + 1],
+                                                   start=P + i),
+                                  c, jnp.asarray([P + i], jnp.int32))
+        ref.append(lg[:, 0])
+    ref = jnp.stack(ref, axis=1)
+    assert float(jnp.max(jnp.abs(logits_v - ref))) < 1e-4
+    # and the written K/V agrees with the sequential path
+    for leaf_v, leaf_r in zip(jax.tree.leaves(cache_v), jax.tree.leaves(c)):
+        assert float(jnp.max(jnp.abs(leaf_v - leaf_r))) < 1e-4
+
+
+def test_spec_cache_update_drops_invalid_rows():
+    kc = jnp.zeros((2, 8, 1, 2))
+    knew = jnp.ones((2, 3, 1, 2))
+    clens = jnp.asarray([1, 5], jnp.int32)
+    valid = jnp.asarray([[True, True, False], [True, False, False]])
+    kc2, _ = attn.spec_cache_update(kc, kc, knew, knew, clens, valid)
+    assert float(jnp.sum(kc2)) == 3 * 2          # 3 valid writes x K*hd
+    assert float(kc2[0, 1, 0, 0]) == 1.0 and float(kc2[0, 2, 0, 0]) == 1.0
+    assert float(kc2[0, 3, 0, 0]) == 0.0         # invalid row dropped
+    assert float(kc2[1, 5, 0, 0]) == 1.0 and float(kc2[1, 6, 0, 0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# mode="extend" multi-position logits == per-token decode (ISSUE 3 satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "recurrentgemma-9b",
+                                  "xlstm-350m"])
+def test_extend_all_logits_match_per_token_decode(arch):
+    """One ``extend`` call with ``with_logits="all"`` must return, at every
+    chunk position, the same logits a per-token decode loop produces — the
+    contract the per-slot speculative verify path (and its recurrent/ring
+    rollback replay) is built on."""
+    cfg = _cfg(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    P, S, cap = 9, 6, 64
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, P + S), 0,
+                              cfg.vocab_size)
+    cache = model.init_cache(1, cap)
+    _, cache = model.prefill(params, model.make_batch(toks[:, :P]), cache,
+                             length=jnp.int32(P))
+    logits_e, _ = model.extend(params, model.make_batch(toks[:, P:], start=P),
+                               cache, jnp.int32(P), length=jnp.int32(S),
+                               with_logits="all")
+    ref, c = [], cache
+    for i in range(S):
+        lg, c = model.decode_step(params,
+                                  model.make_batch(toks[:, P + i:P + i + 1],
+                                                   start=P + i),
+                                  c, jnp.int32(P + i))
+        ref.append(lg[:, 0])
+    ref = jnp.stack(ref, axis=1)
+    assert float(jnp.max(jnp.abs(logits_e - ref))) < 2e-4, arch
+    # "last" slices the same tensor down to the final position
+    logits_l, _ = model.extend(params, model.make_batch(toks[:, P:], start=P),
+                               cache, jnp.int32(P), length=jnp.int32(S),
+                               with_logits="last")
+    assert logits_l.shape[1] == 1
+    assert float(jnp.max(jnp.abs(logits_l[:, 0] - logits_e[:, -1]))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# engine: speculative == non-speculative, bit for bit (greedy)
+# ---------------------------------------------------------------------------
+
+COPY_PROMPTS = [
+    "Tool result: ERROR 429 rate limit exceeded at gateway. " * 2,
+    "summarize: the quick brown fox jumps over the lazy dog again and "
+    "again and again",
+    "log: a=1 b=2; log: a=1 b=2; log: a=1 b=3; what changed?",
+]
+
+
+@pytest.mark.parametrize("mode", ["dense", "paged"])
+def test_spec_greedy_identical_batched_verify(mode):
+    cfg = _cfg("qwen2.5-3b")
+    base = ServingEngine(cfg, num_slots=3, capacity=160,
+                         engine_cfg=EngineConfig(cache_mode=mode))
+    spec = ServingEngine(cfg, num_slots=3, capacity=160, params=base.params,
+                         engine_cfg=EngineConfig(cache_mode=mode, spec_len=6))
+    b = [base.generate(p, max_new_tokens=40) for p in COPY_PROMPTS]
+    s = [spec.generate(p, max_new_tokens=40) for p in COPY_PROMPTS]
+    assert b == s
+    st = spec.stats()
+    assert st["verify_steps"] > 0 and st["draft_tokens"] > 0
+    assert st["accepted_tokens"] > 0
+    assert 0.0 < st["acceptance_rate"] <= 1.0
+    base_st = base.stats()
+    assert base_st["verify_steps"] == 0 and base_st["draft_tokens"] == 0
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-9b", "xlstm-350m",
+                                  "mixtral-8x22b"])
+def test_spec_greedy_identical_perslot_rollback(arch):
+    """Stateful archs (recurrent / conv / xLSTM state, ring KV) speculate
+    per-slot with a snapshot + length-masked replay on partial accept; a
+    rejected draft must leave recurrent state and ring caches bit-exact."""
+    cfg = _cfg(arch)
+    base = ServingEngine(cfg, num_slots=2, capacity=128)
+    spec = ServingEngine(cfg, num_slots=2, capacity=128, params=base.params,
+                         engine_cfg=EngineConfig(spec_len=6))
+    b = [base.generate(p, max_new_tokens=40) for p in COPY_PROMPTS[:2]]
+    s = [spec.generate(p, max_new_tokens=40) for p in COPY_PROMPTS[:2]]
+    assert b == s, arch
+
+
+def test_spec_mixed_batch_and_queue_pressure():
+    """More requests than slots with speculation on: FIFO admission, slot
+    recycling, and exact token budgets all survive the verify path."""
+    cfg = _cfg("qwen2.5-3b")
+    base = ServingEngine(cfg, num_slots=2, capacity=128)
+    spec = ServingEngine(cfg, num_slots=2, capacity=128, params=base.params,
+                         engine_cfg=EngineConfig(spec_len=5))
+    for eng in (base, spec):
+        reqs = [eng.submit(COPY_PROMPTS[i % 3], max_new_tokens=12 + i)
+                for i in range(6)]
+        eng.run_until_drained()
+        assert all(r.output_tokens == 12 + i for i, r in enumerate(reqs))
+    b = [base.generate(p, max_new_tokens=16) for p in COPY_PROMPTS]
+    s = [spec.generate(p, max_new_tokens=16) for p in COPY_PROMPTS]
+    assert b == s
+
+
+def test_spec_sampling_deterministic_and_bounded():
+    """Stochastic slots under speculation: same seed -> same text, and the
+    rejection-sampled tokens stay inside the vocab limit."""
+    cfg = _cfg("qwen2.5-3b")
+    e1 = ServingEngine(cfg, num_slots=2, capacity=128, seed=5,
+                       engine_cfg=EngineConfig(spec_len=5))
+    e2 = ServingEngine(cfg, num_slots=2, capacity=128, params=e1.params,
+                       seed=5, engine_cfg=EngineConfig(spec_len=5))
+    a = e1.generate(COPY_PROMPTS[0], max_new_tokens=24, temperature=1.2,
+                    top_k=20)
+    b = e2.generate(COPY_PROMPTS[0], max_new_tokens=24, temperature=1.2,
+                    top_k=20)
+    assert a == b
+
+
+def test_spec_adaptive_disable_falls_back_to_chunked():
+    """An impossible acceptance floor turns per-slot drafting off after the
+    warmup; outputs stay identical and decode continues through the chunked
+    loop (the interleave contract)."""
+    cfg = _cfg("qwen2.5-3b")
+    base = ServingEngine(cfg, num_slots=1, capacity=128)
+    spec = ServingEngine(cfg, num_slots=1, capacity=128, params=base.params,
+                         engine_cfg=EngineConfig(spec_len=6,
+                                                 spec_min_accept=1.1,
+                                                 spec_warmup=1))
+    p = COPY_PROMPTS[0]
+    assert spec.generate(p, max_new_tokens=40) == \
+        base.generate(p, max_new_tokens=40)
+    st = spec.stats()
+    assert st["verify_steps"] <= 2          # disabled after the first verify
+    assert st["decode_chunks"] > 0
+
+
+def test_spec_rejects_non_text_modality():
+    with pytest.raises(ValueError):
+        ServingEngine(ARCHS["musicgen-large"].reduced(
+            dtype="float32", param_dtype="float32"),
+            num_slots=1, capacity=64, engine_cfg=EngineConfig(spec_len=4))
+
+
+def test_spec_len_must_be_non_negative():
+    with pytest.raises(ValueError):
+        ServingEngine(_cfg("qwen2.5-3b"), num_slots=1, capacity=64,
+                      engine_cfg=EngineConfig(spec_len=-1))
+
+
+# ---------------------------------------------------------------------------
+# paged: no page leak under speculative rollback (hypothesis)
+# ---------------------------------------------------------------------------
+
+_LEAK_ENGINE = None
+
+
+def _leak_engine():
+    global _LEAK_ENGINE
+    if _LEAK_ENGINE is None:
+        cfg = _cfg("qwen2.5-3b")
+        # decode_chunk=4 so small budgets still interleave verify steps with
+        # the chunked loop (checked below: speculation must actually fire)
+        _LEAK_ENGINE = ServingEngine(
+            cfg, num_slots=2, capacity=64,
+            engine_cfg=EngineConfig(cache_mode="paged", page_size=16,
+                                    num_pages=12, spec_len=5,
+                                    decode_chunk=4))
+    return _LEAK_ENGINE
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(2, 20)),
+                min_size=4, max_size=14))
+@settings(max_examples=60, deadline=None)
+def test_spec_paged_no_page_leak(reqs):
+    """~500 speculative paged requests across examples (shared prefixes,
+    random token budgets, LRU eviction pressure from the deliberately small
+    pool, frequent draft rejections): after every drain each page is owned
+    exactly once — free list or radix tree — so rejected-draft rollback
+    never leaks or double-frees a page."""
+    eng = _leak_engine()
+    # repetitive prompts so the n-gram drafter fires (and gets rejected a
+    # lot at these tiny budgets — the rollback path is the test subject)
+    pool = ["err 429 err 429 err 429. " + t for t in
+            ("", "tail one", "go go go go go", "a longer tail that spills "
+             "pages and repeats repeats repeats")]
+    for variant, budget in reqs:
+        eng.submit(pool[variant], max_new_tokens=budget)
+    eng.run_until_drained()
+    assert all(s.request is None for s in eng.slots)
+    owned = eng.radix.check_invariants()
+    free = eng.kvpool.num_free
+    assert len(owned) + free == eng.kvpool.num_pages - eng.kvpool.reserved
+    assert not (owned & set(eng.kvpool._free))
+
+
+def test_spec_paged_leak_engine_speculated():
+    """Companion gate for the property above (also its no-hypothesis
+    fallback): run a seeded request stream through the shared engine and
+    require that verify steps actually happened — a silent
+    never-speculated run would make the leak property vacuous."""
+    import random
+    eng = _leak_engine()
+    rng = random.Random(0)
+    pool = ["err 429 err 429 err 429. " + t for t in
+            ("", "tail one", "go go go go go", "a longer tail that spills "
+             "pages and repeats repeats repeats")]
+    for _ in range(8):
+        for _ in range(rng.randint(4, 14)):
+            eng.submit(pool[rng.randrange(4)],
+                       max_new_tokens=rng.randint(2, 20))
+        eng.run_until_drained()
+        owned = eng.radix.check_invariants()
+        assert (len(owned) + eng.kvpool.num_free
+                == eng.kvpool.num_pages - eng.kvpool.reserved)
+    st = eng.stats()
+    assert st["verify_steps"] > 0 and st["draft_tokens"] > 0
+    assert eng.radix.evicted_pages > 0
+
+
+# ---------------------------------------------------------------------------
+# radix-aware admission batching (ISSUE 3 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_radix_grouped_admission_counts_and_outputs():
+    """Queued requests sharing the admitted request's first radix block jump
+    (stably) to the queue front and admit in the same engine step; the
+    grouping is counted and never changes any request's output."""
+    cfg = _cfg("qwen2.5-3b")
+    sys_a = "SYSTEM PROMPT ALPHA shared by planner/actor/evaluator. "
+    sys_b = "system prompt bravo shared by a second workflow here. "
+    prompts = [sys_a + "plan the step", sys_b + "plan the step",
+               sys_a + "act on the step", sys_b + "act now please",
+               sys_a + "evaluate result", sys_b + "evaluate please"]
+    dense = ServingEngine(cfg, num_slots=3, capacity=96)
+    paged = ServingEngine(cfg, num_slots=3, capacity=96, params=dense.params,
+                          engine_cfg=EngineConfig(cache_mode="paged",
+                                                  page_size=16))
+    for p in prompts:
+        paged.submit(p, max_new_tokens=8)
+    paged.run_until_drained()
+    s = paged.stats()
+    # admitting the first ALPHA request pulls the other two ALPHAs into the
+    # same step (and likewise for BRAVO once it reaches the head)
+    assert s["grouped_admissions"] >= 2
+    d = [dense.generate(p, max_new_tokens=8) for p in prompts]
+    p2 = [paged.generate(p, max_new_tokens=8) for p in prompts]
+    assert d == p2
+    # a lone request never groups with itself
+    lone = ServingEngine(cfg, num_slots=1, capacity=96, params=dense.params,
+                         engine_cfg=EngineConfig(cache_mode="paged"))
+    lone.generate("just one request", max_new_tokens=4)
+    assert lone.stats()["grouped_admissions"] == 0

@@ -1,4 +1,4 @@
-"""Prefix-sharing benchmark: paged KV + radix tree vs the dense PR-1 cache.
+"""Prefix-sharing benchmark: radix prefix reuse vs the dense PR-1 cache.
 
 Workload: the FAME multi-agent shape (PAPER.md §3.3) — N agents (Planner /
 Actor / Evaluator) share one system prompt, and every turn's prompt is the
@@ -7,19 +7,24 @@ pattern whose re-sent prefix dominated input tokens in the paper. The same
 request stream runs through two engines sharing one set of weights:
 
 * **paged** — ``EngineConfig(cache_mode="paged")``: radix-matched prefixes
-  reuse their KV pages; only the per-turn suffix is prefilled.
+  are never re-prefilled. On full-attention archs the prefix's KV *pages*
+  are reused outright; on stateful archs (``--arch recurrentgemma-9b`` /
+  ``xlstm-350m`` / ``mixtral-8x22b``) the engine restores the nearest
+  per-prefix recurrent-state *snapshot* and prefills only the suffix.
 * **dense** — the PR-1 per-slot cache: every turn re-prefills its full
   prompt from scratch.
 
-Reported: total prefill seconds (warm), prefill speedup, shared-page hit
-rate, padding waste, and an output-equality check (greedy decode must be
-identical between modes):
+Reported: total prefill seconds (warm), prefill speedup, shared-prefix hit
+rate (plus snapshot hit/capture counters on stateful archs), padding waste,
+and an output-equality check (greedy decode must be identical between
+modes):
 
     PYTHONPATH=src python benchmarks/prefix_bench.py [--smoke] [--arch A]
 
-Acceptance floor (ISSUE 2): paged prefill time <= 1/2 dense prefill time on
-CPU with the multi-agent workload, identical greedy outputs, hit rate
-reported in the JSON (CI runs ``--smoke`` as a perf gate).
+Acceptance floors (ISSUEs 2 and 4): paged prefill time <= 1/2 dense prefill
+time on CPU with the multi-agent workload — for full-attention archs AND
+for stateful archs via snapshots — identical greedy outputs, hit rate
+reported in the JSON (CI runs ``--smoke`` for both as perf gates).
 """
 from __future__ import annotations
 
@@ -100,6 +105,12 @@ def run_engine(engine, prompts, max_new):
                                  / max(d("prompt_tokens"), 1), 4),
         "pages_peak_in_use": warm.get("pages_peak_in_use", 0),
         "radix_evicted_pages": warm.get("radix_evicted_pages", 0),
+        # snapshot mode (stateful archs): restored vs from-scratch admissions
+        "snapshot_hits": d("snapshot_hits"),
+        "snapshot_misses": d("snapshot_misses"),
+        "snapshot_captures": d("snapshot_captures"),
+        "snapshots_peak_in_use": warm.get("snapshots_peak_in_use", 0),
+        "snapshot_evictions": warm.get("snapshot_evictions", 0),
     }, [r.output_text for r in reqs]
 
 

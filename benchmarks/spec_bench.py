@@ -42,13 +42,24 @@ LOG_LINES = (
     "2026-07-28T09:14:05 gateway ERROR 429 rate limit exceeded for "
     "tool=fetch retry_after=30s trace=ab1301; ")
 
+FLAP_LINES = "err 429; ok 200; "
 
-def make_workload(n_agents: int):
-    """Prompt stream: each agent gets the shared tool-result/log context and
-    an instruction whose faithful answer copies spans of it verbatim."""
-    return [f"[agent {i}] Analyze the log and list every failing line "
-            f"verbatim, then name the failing tools: " + LOG_LINES * 3
-            for i in range(n_agents)]
+
+def make_workload(n_agents: int, kind: str):
+    """Prompt stream: each agent gets a shared tool-result/log context and
+    an instruction whose faithful answer copies spans of it verbatim.
+    ``copy``: long-period log lines (the attention-arch shape — verbatim
+    span re-surfacing). ``flap``: short-period status flapping (the
+    stateful-arch shape — a recurrent state locked into the cycle keeps
+    emitting it, which is exactly what the n-gram drafter predicts)."""
+    if kind == "copy":
+        ctx = LOG_LINES * 3
+        ask = "Analyze the log and list every failing line verbatim, " \
+              "then name the failing tools: "
+    else:
+        ctx = FLAP_LINES * 20
+        ask = "The status stream below flaps; continue it verbatim: "
+    return [f"[agent {i}] {ask}" + ctx for i in range(n_agents)]
 
 
 def run_engine(engine, prompts, max_new):
@@ -87,13 +98,38 @@ def run_engine(engine, prompts, max_new):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b",
-                    help="full-attention arch (batched verify path)")
+                    help="any registry arch — full attention verifies over "
+                         "its KV cache, stateful archs (recurrentgemma / "
+                         "xlstm / mixtral) through staged per-position "
+                         "states + accept-length rewind")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=512)
     ap.add_argument("--agents", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=160)
     ap.add_argument("--spec-len", type=int, default=8)
     ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--num-layers", type=int, default=4,
+                    help="reduced-config depth (use a multiple of the "
+                         "arch's block pattern length)")
+    ap.add_argument("--modes", default="dense,paged",
+                    help="comma-separated cache modes to A/B")
+    ap.add_argument("--floor", type=float, default=1.8,
+                    help="CI gate: min decode tok/s speedup per mode")
+    ap.add_argument("--min-accept", type=float, default=0.60,
+                    help="CI gate: min draft acceptance rate")
+    ap.add_argument("--workload", choices=("copy", "flap"), default=None,
+                    help="copy: long-period log lines (attention copy "
+                         "shape); flap: short-period status cycle "
+                         "(stateful-arch shape). Default: flap for "
+                         "stateful archs, copy otherwise")
+    ap.add_argument("--tie-embeddings", action="store_true",
+                    help="tie embed/unembed in the reduced config. Random "
+                         "(untrained) stateful archs only produce the "
+                         "copyable outputs this bench measures when the "
+                         "residual stream reaches the unembed — trained "
+                         "models copy on their own; this keeps the A/B in "
+                         "the same acceptance regime (use for "
+                         "recurrentgemma)")
     ap.add_argument("--out", default="results/spec_bench.json")
     ap.add_argument("--smoke", action="store_true",
                     help="small fast run for CI perf gating")
@@ -101,23 +137,30 @@ def main():
     if args.smoke:
         # decode-heavy enough that the wall-clock A/B is stable: the spec
         # engine's decode phase is several times shorter than base, so short
-        # runs would put CI-runner noise right against the 1.8x floor
+        # runs would put CI-runner noise right against the floor
         args.agents, args.max_new = 4, 176
 
     from repro.configs.registry import ARCHS
     from repro.serving.engine import EngineConfig, ServingEngine
+    from repro.serving.kvpool import supports_paged
 
     # prefix_bench-sized dims: decode must be compute-bound (not
     # jit-dispatch-bound) so the A/B measures fewer-forwards-per-token, not
     # per-call overhead
+    over = dict(vocab_size=512, d_model=256, num_heads=8, head_dim=32,
+                d_ff=512, num_layers=args.num_layers)
+    if args.tie_embeddings:
+        over["tie_embeddings"] = True
     cfg = ARCHS[args.arch].reduced(dtype="float32", param_dtype="float32",
-                                   vocab_size=512, d_model=256, num_heads=8,
-                                   head_dim=32, d_ff=512, num_layers=4)
-    prompts = make_workload(args.agents)
+                                   **over)
+    if args.workload is None:
+        args.workload = "copy" if supports_paged(cfg)[0] else "flap"
+    prompts = make_workload(args.agents, args.workload)
+    modes = [m.strip() for m in args.modes.split(",") if m.strip()]
 
     results, outputs = {}, {}
     params = None
-    for mode in ("dense", "paged"):
+    for mode in modes:
         for tag, spec_len in (("spec", args.spec_len), ("base", 0)):
             eng = ServingEngine(
                 cfg, num_slots=args.slots, capacity=args.capacity,
@@ -131,31 +174,28 @@ def main():
 
     speedup = {m: round(results[f"{m}_spec"]["decode_tok_s"]
                         / max(results[f"{m}_base"]["decode_tok_s"], 1e-9), 2)
-               for m in ("dense", "paged")}
-    acc = results["dense_spec"]["acceptance_rate"]
+               for m in modes}
+    acc = results[f"{modes[0]}_spec"]["acceptance_rate"]
 
+    checks = {"acceptance_floor": acc >= args.min_accept}
+    for m in modes:
+        checks[f"{m}_speedup_floor"] = speedup[m] >= args.floor
+        checks[f"{m}_outputs_bit_identical"] = \
+            outputs[f"{m}_spec"] == outputs[f"{m}_base"]
     result = {
         "bench": "speculative_decode",
         "arch": args.arch,
+        "workload": args.workload,
         "num_slots": args.slots,
         "capacity": args.capacity,
         "spec_len": args.spec_len,
         "requests": len(prompts),
         "max_new_tokens": args.max_new,
+        "speedup_floor": args.floor,
+        "acceptance_floor": args.min_accept,
         **{k: v for k, v in results.items()},
-        "decode_speedup_dense": speedup["dense"],
-        "decode_speedup_paged": speedup["paged"],
-        "checks": {
-            # the ISSUE-3 gates: >= 1.8x decode tok/s at >= 60% acceptance,
-            # greedy outputs bit-identical in both cache modes
-            "dense_speedup_ge_1_8x": speedup["dense"] >= 1.8,
-            "paged_speedup_ge_1_8x": speedup["paged"] >= 1.8,
-            "acceptance_ge_60pct": acc >= 0.60,
-            "dense_outputs_bit_identical":
-                outputs["dense_spec"] == outputs["dense_base"],
-            "paged_outputs_bit_identical":
-                outputs["paged_spec"] == outputs["paged_base"],
-        },
+        **{f"decode_speedup_{m}": speedup[m] for m in modes},
+        "checks": checks,
     }
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
@@ -163,9 +203,10 @@ def main():
     print(json.dumps(result, indent=2))
     if not all(result["checks"].values()):
         raise SystemExit("spec_bench: perf checks FAILED")
-    print(f"spec_bench: OK ({speedup['dense']:.1f}x dense / "
-          f"{speedup['paged']:.1f}x paged decode vs non-speculative, "
-          f"{acc:.0%} draft acceptance, outputs identical) -> {args.out}")
+    print("spec_bench: OK ("
+          + " / ".join(f"{speedup[m]:.1f}x {m}" for m in modes)
+          + f" decode vs non-speculative, {acc:.0%} draft acceptance, "
+            f"outputs identical) -> {args.out}")
 
 
 if __name__ == "__main__":

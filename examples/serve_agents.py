@@ -27,8 +27,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--cache-mode", default="dense", choices=("dense", "paged"),
-                    help="paged = KV page pool + radix prefix sharing "
-                         "(full-attention archs only); agent turns that "
+                    help="paged = radix prefix sharing: KV page pool on "
+                         "full-attention archs, per-prefix recurrent-state "
+                         "snapshots on stateful archs; agent turns that "
                          "re-send the conversation prefix skip its prefill")
     ap.add_argument("--spec-len", type=int, default=0,
                     help="speculative decode: max draft tokens per verify "
@@ -64,11 +65,16 @@ def main():
           f"{stats['host_syncs_per_token']:.3f} host syncs/token "
           f"({stats['host_syncs']} syncs / {stats['decode_tokens']} decode tokens)")
     if args.cache_mode == "paged":
+        kind = ("shared pages" if "pages_total" in stats
+                else "restored state snapshots")
+        pool = (f"{stats['pages_free']}/{stats['pages_total']} pages free"
+                if "pages_total" in stats else
+                f"{stats['snapshots_free']}/{stats['snapshots_total']} "
+                f"snapshot rows free")
         print(f"prefix sharing: {stats['prefix_hit_rate']:.0%} of prompt "
-              f"tokens served from shared pages "
+              f"tokens served from {kind} "
               f"({stats['prefix_hit_tokens']}/{stats['prompt_tokens']}), "
-              f"{stats['radix_nodes']} radix nodes, "
-              f"{stats['pages_free']}/{stats['pages_total']} pages free")
+              f"{stats['radix_nodes']} radix nodes, {pool}")
 
     # 2) the same engine as the agents' LLM backend (one workflow invocation)
     rt = FameRuntime(config=CONFIGS["M+C"], max_iterations=1)

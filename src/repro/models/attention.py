@@ -234,11 +234,14 @@ def cache_update(k_cache, v_cache, k_new, v_new, cache_len):
 # Speculative verify: S draft tokens per row at PER-ROW positions
 # [cache_lens[b], cache_lens[b]+S) — the batched multi-token decode that
 # scores a whole draft in one forward (serving engine spec path). Linear
-# (non-ring) caches only: rejected-draft K/V beyond the accepted prefix is
-# rolled back for free because every later read masks by cache position, and
-# causality guarantees K/V at accepted positions never depended on rejected
-# tokens. Ring/windowed and recurrent caches need the engine's snapshot +
-# replay path instead (extend with a valid-prefix length).
+# (non-ring) caches write ahead: rejected-draft K/V beyond the accepted
+# prefix is rolled back for free because every later read masks by cache
+# position, and causality guarantees K/V at accepted positions never
+# depended on rejected tokens. Ring (windowed) caches can't write ahead — a
+# ring write destroys the overwritten position — so they attend a
+# position-ordered view + the draft chunk (ring_verify_view /
+# spec_attention_ring) and splice only the accepted rows afterwards
+# (ring_verify_commit, driven by transformer.verify_commit).
 # ---------------------------------------------------------------------------
 
 
@@ -271,6 +274,66 @@ def paged_spec_cache_update(pool_k, pool_v, k_new, v_new, block_tables,
     pool_k = pool_k.at[page, off].set(k_new.astype(pool_k.dtype))
     pool_v = pool_v.at[page, off].set(v_new.astype(pool_v.dtype))
     return pool_k, pool_v
+
+
+def ring_verify_view(cache, cache_lens):
+    """Per-row position-ordered ring view for the verify step: row i of
+    sequence b holds position ``cache_lens[b] - cap + i`` (negative =
+    unwritten, masked by the attention below)."""
+    cap = cache.shape[1]
+    return jax.vmap(lambda c, s: jnp.roll(c, -s, axis=0))(cache,
+                                                          cache_lens % cap)
+
+
+def spec_attention_ring(q, k_view, v_view, cache_lens, *, q_per_kv: int,
+                        window: int):
+    """Multi-token decode attention against a ring (windowed) cache view.
+
+    q [B,S,H,hd] (query s of row b at position ``cache_lens[b] + s``) against
+    ``concat(ring_verify_view(cache), chunk)`` [B,cap+S,K,hd]: view row i of
+    sequence b uniformly holds position ``cache_lens[b] - cap + i``
+    (cap = T - S), so one mask formula covers cached and draft keys. Queries
+    attend causally within the sliding ``window``; nothing is written — the
+    draft K/V is ring-spliced by ``ring_verify_commit`` only after the accept
+    step picks each row's accepted length (a ring write is destructive, so
+    the write-ahead trick of the linear-cache verify path can't be used).
+    """
+    B, S, H, hd = q.shape
+    T = k_view.shape[1]
+    cap = T - S
+    K = k_view.shape[2]
+    G = q_per_kv
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgh,bwkh->bkgsw", qg, k_view,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    pos_k = cache_lens[:, None] - cap + jnp.arange(T, dtype=jnp.int32)[None]
+    pos_q = cache_lens[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    valid = ((pos_k[:, None, :] >= 0)
+             & (pos_k[:, None, :] <= pos_q[:, :, None])
+             & (pos_q[:, :, None] - pos_k[:, None, :] < window))  # [B,S,T]
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgsw,bwkh->bskgh", p.astype(v_view.dtype), v_view,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def ring_verify_commit(staged, cache_lens, ns, valid):
+    """Commit a ring cache's verify step at each row's accepted length:
+    splice the first ``ns[b]`` draft K/V rows into the ring (``ns = 0`` — an
+    invalid row — leaves the ring bit-exact). staged:
+    {"k", "v": the untouched pre-verify rings, "k_new", "v_new": [B,S,K,hd]}.
+    """
+    length = jnp.where(valid, ns, 0)
+
+    def one(ck, cv, kn, vn, start, n):
+        kc = ring_extend_write(ck[None], kn[None], start, n)[0]
+        vc = ring_extend_write(cv[None], vn[None], start, n)[0]
+        return kc, vc
+
+    kc, vc = jax.vmap(one)(staged["k"], staged["v"], staged["k_new"],
+                           staged["v_new"], cache_lens, length)
+    return {"k": kc, "v": vc}
 
 
 def spec_attention(q, k_cache, v_cache, cache_lens, *, q_per_kv: int):

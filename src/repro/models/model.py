@@ -61,6 +61,13 @@ class Model:
         forward, per-row cache lengths. See transformer.verify."""
         return tfm.verify(params, batch, self.cfg, cache, cache_lens, **kw)
 
+    def verify_commit(self, staged, cache_lens, ns, lens):
+        """Resolve a verify call's staged record to the committed cache at
+        each row's accepted length (batched accept-rewind for stateful
+        blocks; identity for linear full attention). See
+        transformer.verify_commit."""
+        return tfm.verify_commit(self.cfg, staged, cache_lens, ns, lens)
+
     # ---- input construction ------------------------------------------------
     def make_batch(self, tokens_or_frames, *, labels=None, positions=None, start=0):
         cfg = self.cfg

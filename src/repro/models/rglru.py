@@ -76,8 +76,11 @@ def _gates(p, x):
     return a, beta * i * xf
 
 
-def rglru_scan(p, x, h0=None, mask=None):
-    """Linear recurrence over [B,S,R] via associative scan. Returns (y, h_S).
+def rglru_scan(p, x, h0=None, mask=None, all_states: bool = False):
+    """Linear recurrence over [B,S,R] via associative scan. Returns (y, h_S),
+    or (y, hh [B,S,R] f32 — the state after EVERY position) when
+    ``all_states`` — the speculative verify step keeps all of them so the
+    accept step can rewind to any accepted prefix with a gather.
 
     ``mask`` [B,S] bool: padded positions become identity steps (a=1, input=0)
     so the final state equals the state after the last *valid* position.
@@ -94,7 +97,7 @@ def rglru_scan(p, x, h0=None, mask=None):
         return al * ar, ar * bl + br
 
     aa, hh = jax.lax.associative_scan(op, (a, bx), axis=1)
-    return hh.astype(x.dtype), hh[:, -1]
+    return hh.astype(x.dtype), (hh if all_states else hh[:, -1])
 
 
 def rglru_step(p, x, h):
@@ -110,21 +113,33 @@ def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full", length=None,
 
     x [B,S,D] -> (y [B,S,D], new_cache) with cache {"h": [B,R] f32,
     "conv": [B,W-1,R]}. ``length``/``mask`` mark the valid prefix when the
-    prompt is right-padded to a prefill bucket — and double as the
-    speculative-decode rollback mechanism: after a partial draft accept the
-    engine replays the accepted prefix through extend with ``length`` set to
-    it, and the identity-step masking (a=1, input=0 past ``length``; conv
-    state sliced at ``length``) rewinds h and the conv window bit-exactly.
+    prompt is right-padded to a prefill bucket (identity steps — a=1,
+    input=0 — past the valid prefix). ``mode="verify"`` returns a staged
+    record instead of a cache: per-position states the speculative accept
+    step rewinds with a gather (``verify_commit``) — batched across rows,
+    no replay forward.
     """
     u = jnp.einsum("bsd,dr->bsr", x, p["wx"])
     gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["wy"]))
-    # extend (chunked-prefill continuation) resumes conv + recurrence state
-    # from the cache instead of zeros; everything else matches "full"
-    prev_conv = cache["conv"] if mode == "extend" else None
-    h0 = cache["h"] if mode == "extend" else None
+    # extend / verify (prefill or draft continuation) resume conv +
+    # recurrence state from the cache instead of zeros
+    prev_conv = cache["conv"] if mode in ("extend", "verify") else None
+    h0 = cache["h"] if mode in ("extend", "verify") else None
     if mode == "decode":
         c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], cache["conv"])
         y, h = rglru_step(p, c, cache["h"])
+    elif mode == "verify":
+        # batched speculative verify: per-row draft chunks at per-row valid
+        # lengths (``mask``). Nothing is committed here — the staged record
+        # holds the state after EVERY draft position plus the raw conv input
+        # stream, and ``verify_commit`` gathers the state at each row's
+        # accepted length once the accept step has chosen it (the batched
+        # replacement for the old per-slot snapshot+replay rollback).
+        c, _ = causal_conv1d(u, p["conv_w"], p["conv_b"], prev_conv)
+        xs = jnp.concatenate([prev_conv, u], axis=1)      # [B, S+W-1, R]
+        y, hh = rglru_scan(p, c, h0=h0, mask=mask, all_states=True)
+        out = jnp.einsum("bsr,rd->bsd", y * gate, p["wo"])
+        return out, {"hh": hh, "xs": xs, "h0": cache["h"]}
     elif cfg.use_pallas:
         from repro.kernels import rglru_scan as _krg
         c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], prev_conv,
@@ -143,3 +158,27 @@ def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full", length=None,
         y, h = rglru_scan(p, c, h0=h0, mask=mask)
     out = jnp.einsum("bsr,rd->bsd", y * gate, p["wo"])
     return out, {"h": h, "conv": conv_state}
+
+
+def verify_commit(staged, ns, valid):
+    """Rewind one RG-LRU layer's verify record to each row's accepted length.
+
+    staged: ``{"hh" [B,S,R] f32, "xs" [B,S+W-1,R], "h0" [B,R]}`` from
+    ``apply_recurrent_mixer(mode="verify")``; ns [B] = accepted inputs per
+    row (1..S); valid [B] = rows that took part in this verify step (the
+    rest keep their pre-verify state untouched). Returns the committed
+    ``{"h", "conv"}`` cache — state exactly after the first ``ns`` inputs,
+    with no replay forward.
+    """
+    hh, xs, h0 = staged["hh"], staged["xs"], staged["h0"]
+    B, S, R = hh.shape
+    W1 = xs.shape[1] - S                                   # conv width - 1
+    idx = jnp.clip(ns - 1, 0, S - 1)
+    h = jnp.take_along_axis(hh, idx[:, None, None], axis=1)[:, 0]
+    h = jnp.where(valid[:, None], h, h0)
+    # conv window after n inputs = stream positions [n-W+1, n) = xs[n:n+W-1]
+    n_eff = jnp.where(valid, jnp.clip(ns, 0, S), 0)        # 0 -> old window
+    conv = jax.vmap(
+        lambda row, n: jax.lax.dynamic_slice_in_dim(row, n, W1, axis=0)
+    )(xs, n_eff)
+    return {"h": h, "conv": conv}

@@ -163,34 +163,43 @@ def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len,
         new_cache = {"k": kc, "v": vc}
     elif mode == "verify":
         # speculative verify: S draft tokens per row at PER-ROW positions
-        # [cache_len[b], cache_len[b]+S); linear full-attention caches only
-        # (the engine routes windowed/recurrent archs through the per-slot
-        # extend + snapshot/rollback path instead). Writes of the padded
-        # draft tail are dropped; rejected-draft K/V needs no rollback
-        # because later reads mask by cache position and K/V at accepted
-        # positions is causally independent of rejected tokens.
-        if window is not None:
-            raise NotImplementedError(
-                "verify mode needs full (non-windowed) attention; the engine "
-                "uses per-slot extend + snapshot rollback for ring caches")
+        # [cache_len[b], cache_len[b]+S). Linear full-attention caches write
+        # ahead: writes of the padded draft tail are dropped, and
+        # rejected-draft K/V needs no rollback because later reads mask by
+        # cache position and K/V at accepted positions is causally
+        # independent of rejected tokens. Ring (windowed) caches can't write
+        # ahead — a ring write destroys the overwritten position — so they
+        # attend against a position-ordered view + the draft chunk and stage
+        # the chunk K/V for ``verify_commit`` to ring-splice at each row's
+        # accepted length.
         S = k.shape[1]
         clens = jnp.asarray(cache_len, jnp.int32).reshape(-1)
         lens = (prefill_len if prefill_len is not None else jnp.int32(S))
         valid = jnp.arange(S, dtype=jnp.int32)[None, :] < \
             jnp.reshape(lens, (-1, 1))
         valid = jnp.broadcast_to(valid, (k.shape[0], S))
-        if block_tables is not None:
+        if window is not None:
+            kv = jnp.concatenate([attn.ring_verify_view(cache["k"], clens),
+                                  k.astype(cache["k"].dtype)], axis=1)
+            vv = jnp.concatenate([attn.ring_verify_view(cache["v"], clens),
+                                  v.astype(cache["v"].dtype)], axis=1)
+            o = attn.spec_attention_ring(q, kv, vv, clens,
+                                         q_per_kv=cfg.q_per_kv, window=window)
+            new_cache = {"k": cache["k"], "v": cache["v"],
+                         "k_new": k, "v_new": v}
+        elif block_tables is not None:
             ps = cache["k"].shape[1]
             kc, vc = attn.paged_spec_cache_update(
                 cache["k"], cache["v"], k, v, block_tables, clens, valid, ps)
             o = attn.spec_attention(q, attn.paged_view(kc, block_tables),
                                     attn.paged_view(vc, block_tables), clens,
                                     q_per_kv=cfg.q_per_kv)
+            new_cache = {"k": kc, "v": vc}
         else:
             kc, vc = attn.spec_cache_update(cache["k"], cache["v"], k, v,
                                             clens, valid)
             o = attn.spec_attention(q, kc, vc, clens, q_per_kv=cfg.q_per_kv)
-        new_cache = {"k": kc, "v": vc}
+            new_cache = {"k": kc, "v": vc}
     elif mode == "extend":
         # chunk positions [start, start+S); first `prefill_len` rows valid
         S = k.shape[1]
@@ -282,18 +291,18 @@ def _attn_mixer(p, x, cfg, *, kind, positions, mode, cache, cache_len,
 def apply_block(kind, p, x, cfg, *, positions, mode, cache, cache_len,
                 decode_attn_fn, prefill_len=None, prefill_mask=None,
                 block_tables=None):
-    """One residual block. Returns (x', new_cache, aux_loss)."""
+    """One residual block. Returns (x', new_cache, aux_loss).
+
+    In ``mode="verify"`` the returned "cache" of stateful blocks (recurrent /
+    mLSTM / sLSTM / ring attention) is a *staged* record — per-position
+    states plus the pre-verify state — that ``verify_commit`` resolves to a
+    real cache once the accept step has picked each row's accepted length.
+    Full-attention blocks commit in place (position-masked write-ahead).
+    """
     aux = jnp.zeros((), jnp.float32)
-    if mode == "verify" and kind not in (cfgbase.ATTN, cfgbase.ATTN_MOE):
-        # batched verify needs mask-free rollback, which only linear
-        # full-attention caches give; the serving engine speculates on
-        # recurrent / windowed archs through per-slot extend + snapshot
-        raise NotImplementedError(
-            f"verify mode unsupported for {kind!r} layers (per-request "
-            "state needs the snapshot/replay rollback path)")
-    rec_mode = mode if mode in ("decode", "extend") else "full"
+    rec_mode = mode if mode in ("decode", "extend", "verify") else "full"
     rec_len = prefill_len if mode in ("prefill", "extend", "verify") else None
-    rec_mask = prefill_mask if mode in ("prefill", "extend") else None
+    rec_mask = prefill_mask if mode in ("prefill", "extend", "verify") else None
     if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE, cfgbase.LOCAL_ATTN):
         h = apply_norm(p["attn"]["norm"], x, cfg)
         o, new_cache = _attn_mixer(p["attn"], h, cfg, kind=kind, positions=positions,
@@ -423,8 +432,14 @@ def apply_stack(params, x, cfg, *, positions, mode, cache=None, cache_len=None,
             cache_g = jax.tree.map(lambda v: v[g], scan_cache) if use_cache else None
             (x, aux), nc = body((x, aux), (params_g, cache_g))
             slices.append(nc)
-        new_scan_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
-                          if use_cache else None)
+        if not use_cache:
+            new_scan_cache = None
+        elif slices:
+            new_scan_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+        else:
+            # num_layers < len(pattern): every layer is a tail layer and the
+            # scan cache is zero-size — pass it through unchanged
+            new_scan_cache = scan_cache
 
     new_cache = {"scan": new_scan_cache} if use_cache else None
     for j, kind in enumerate(cfg.tail_kinds):
@@ -576,9 +591,14 @@ def verify(params, batch, cfg, cache, cache_lens, *, lens=None,
     positions ``[cache_lens[b], cache_lens[b]+S)``; ``lens`` [B] counts the
     valid inputs (k+1) — padded-tail cache writes are dropped and padded
     logits are garbage the acceptance step never reads. Returns
-    (logits [B,S,V], cache'): ``logits[:, i]`` is the target distribution
+    (logits [B,S,V], staged): ``logits[:, i]`` is the target distribution
     for the token following input i (sampler.accept_batched consumes it).
-    Full-attention archs only; see apply_block's verify gate.
+
+    For pure linear full-attention caches ``staged`` IS the new cache
+    (write-ahead, position-masked). Stateful blocks (recurrent / conv /
+    mLSTM / sLSTM, ring KV) stage per-position states instead — pass
+    ``staged`` plus the accept step's per-row emitted counts to
+    ``verify_commit`` to resolve the final cache. Works for every arch.
     """
     logits, new_cache, _ = forward_logits(params, batch, cfg, mode="verify",
                                           cache=cache, cache_len=cache_lens,
@@ -587,3 +607,51 @@ def verify(params, batch, cfg, cache, cache_lens, *, lens=None,
                                           block_tables=block_tables,
                                           with_logits="all")
     return logits, new_cache
+
+
+def _commit_block(kind, cfg, staged, clens, ns, valid):
+    """Resolve one block's verify record to a committed cache (see
+    apply_block's verify contract)."""
+    window = (cfg.sliding_window if kind != cfgbase.LOCAL_ATTN
+              else cfg.local_window)
+    if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE) and window is None:
+        return staged                       # write-ahead already committed
+    if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE, cfgbase.LOCAL_ATTN):
+        return attn.ring_verify_commit(staged, clens, ns, valid)
+    if kind == cfgbase.RECURRENT:
+        return rglru_mod.verify_commit(staged, ns, valid)
+    if kind == cfgbase.MLSTM:
+        return xlstm_mod.mlstm_verify_commit(staged, ns, valid)
+    if kind == cfgbase.SLSTM:
+        return xlstm_mod.slstm_verify_commit(staged, ns, valid)
+    raise ValueError(kind)
+
+
+def verify_commit(cfg, staged, cache_lens, ns, lens):
+    """Resolve a ``verify`` call's staged record to the committed cache.
+
+    ns [B]: tokens emitted per row by ``sampler.accept_batched`` (= accepted
+    drafts + 1 correction/bonus = inputs actually consumed); lens [B]: the
+    verify call's valid-input counts — rows with ``lens == 0`` sat the step
+    out and keep their pre-verify state bit-exactly. The whole rewind is
+    gathers and ring splices — no second forward — which is what lets
+    stateful archs share the engine's ONE-jit'd-verify-per-step fast path.
+    """
+    clens = jnp.asarray(cache_lens, jnp.int32).reshape(-1)
+    ns = jnp.asarray(ns, jnp.int32).reshape(-1)
+    valid = jnp.asarray(lens, jnp.int32).reshape(-1) > 0
+    new_cache = {"scan": {}}
+    if cfg.num_scan_groups == 0:
+        # num_layers < len(pattern): apply_stack passed the zero-size scan
+        # cache through unchanged — no staged records to resolve
+        new_cache["scan"] = staged["scan"]
+    else:
+        for i, kind in enumerate(cfg.pattern):
+            fn = functools.partial(_commit_block, kind, cfg,
+                                   clens=clens, ns=ns, valid=valid)
+            new_cache["scan"][f"sub{i}"] = jax.vmap(
+                lambda s, fn=fn: fn(s))(staged["scan"][f"sub{i}"])
+    for j, kind in enumerate(cfg.tail_kinds):
+        new_cache[f"tail{j}"] = _commit_block(kind, cfg, staged[f"tail{j}"],
+                                              clens, ns, valid)
+    return new_cache

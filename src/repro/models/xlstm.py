@@ -192,16 +192,20 @@ def apply_mlstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
     ``length``/``mask`` mark the valid prefix under right-padded (bucketed)
     prefill: padded positions get i-gate -> -inf / f-gate -> +large (the same
     trick the chunkwise cell uses for its internal padding), so they neither
-    write to nor decay the (C, n, m) state. The serving engine's speculative
-    rollback leans on exactly this: replaying an extend with ``length`` set
-    to the accepted draft prefix rewinds the matrix memory bit-exactly.
+    write to nor decay the (C, n, m) state. ``mode="verify"`` returns a
+    staged record of per-position states instead of a cache; the
+    speculative accept step rewinds the matrix memory to each row's
+    accepted length with a gather (``mlstm_verify_commit``) — batched, no
+    replay forward.
     """
     H = cfg.num_heads
     u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
     z = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
-    conv_state = cache["conv"] if mode in ("decode", "extend") else None
+    conv_state = cache["conv"] if mode in ("decode", "extend", "verify") else None
+    # verify: per-row lengths live in ``mask``; the committed conv window is
+    # gathered from the staged input stream, not the scalar-length slice
     c, new_conv = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state,
-                                length=length)
+                                length=None if mode == "verify" else length)
     c = jax.nn.silu(c)
     q = _heads(jnp.einsum("bsf,fg->bsg", c, p["wq"]), H)
     k = _heads(jnp.einsum("bsf,fg->bsg", c, p["wk"]), H)
@@ -211,6 +215,27 @@ def apply_mlstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
     if mask is not None and mode != "decode":
         ig = jnp.where(mask[..., None], ig, -1e30)
         fg = jnp.where(mask[..., None], fg, 30.0)
+    if mode == "verify":
+        # batched speculative verify: step the exact decode recurrence over
+        # the (tiny) draft chunk, stacking the (C, n, m) state after every
+        # position so ``mlstm_verify_commit`` can rewind to any accepted
+        # length with a gather — no per-slot snapshot+replay. Masked rows
+        # (i-gate -1e30 / f-gate +30) step as identities, so padded draft
+        # tails neither write to nor decay the matrix memory.
+        def step(st, xs_t):
+            qt, kt, vt, it, ft = xs_t
+            h_t, st2 = mlstm_step(qt[:, None], kt[:, None], vt[:, None],
+                                  it[:, None], ft[:, None], st)
+            return st2, (h_t[:, 0], st2)
+        xs_t = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, ig, fg))
+        _, (hs, states) = jax.lax.scan(step, cache["state"], xs_t)
+        h = jnp.moveaxis(hs, 0, 1)
+        h = _group_norm_heads(h, p["out_norm"])
+        y = jnp.einsum("bsf,fd->bsd", h * jax.nn.silu(z), p["w_down"])
+        staged = {"states": tuple(jnp.moveaxis(s, 0, 1) for s in states),
+                  "state0": cache["state"],
+                  "xs": jnp.concatenate([cache["conv"], u], axis=1)}
+        return y, staged
     if mode == "decode":
         h, state = mlstm_step(q, k, v, ig, fg, cache["state"])
     elif mode == "extend":
@@ -230,10 +255,12 @@ def apply_mlstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
     return y, {"state": state, "conv": new_conv}
 
 
-def slstm_scan(p, x, cfg, state=None, mask=None):
+def slstm_scan(p, x, cfg, state=None, mask=None, all_states: bool = False):
     """Sequential sLSTM over [B,S,D]. state: (c,n,h,m) each [B,D] f32.
 
     ``mask`` [B,S] bool: padded timesteps carry the state through unchanged.
+    ``all_states``: additionally return the state after every position
+    (each [B,S,D] f32) — the verify step's accept-rewind record.
     """
     B, S, D = x.shape
     H = cfg.slstm_heads
@@ -261,19 +288,73 @@ def slstm_scan(p, x, cfg, state=None, mask=None):
         keep = mt[:, None]
         new = tuple(jnp.where(keep, a, b)
                     for a, b in zip((c_new, n_new, h_new, m_new), (c, n, h, m)))
-        return new, h_new.astype(x.dtype)
+        y = h_new.astype(x.dtype)
+        return new, ((y, new) if all_states else y)
 
     gates_t = jnp.moveaxis(gates_x, 1, 0)           # [S,B,4,D]
     mask_t = jnp.moveaxis(mask, 1, 0)               # [S,B]
-    new_state, hs = jax.lax.scan(step, state, (gates_t, mask_t))
-    return jnp.moveaxis(hs, 0, 1), new_state
+    new_state, ys = jax.lax.scan(step, state, (gates_t, mask_t))
+    if all_states:
+        hs, states = ys
+        return jnp.moveaxis(hs, 0, 1), tuple(jnp.moveaxis(s, 0, 1)
+                                             for s in states)
+    return jnp.moveaxis(ys, 0, 1), new_state
 
 
 def apply_slstm(p, x, cfg, *, cache=None, mode="full", length=None, mask=None):
-    state = cache["state"] if mode in ("decode", "extend") else None
-    h, new_state = slstm_scan(p, x, cfg, state, mask=mask if mode != "decode" else None)
+    state = cache["state"] if mode in ("decode", "extend", "verify") else None
+    h, new_state = slstm_scan(p, x, cfg, state,
+                              mask=mask if mode != "decode" else None,
+                              all_states=mode == "verify")
     hf = h.astype(jnp.float32)
     ms = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
     h = ((hf * jax.lax.rsqrt(ms + 1e-6)) * p["out_norm"].astype(jnp.float32)).astype(x.dtype)
     y = jnp.einsum("bsd,de->bse", h, p["wo"])
+    if mode == "verify":
+        # new_state is the per-position state stack; commit gathers at the
+        # accepted length (slstm_verify_commit)
+        return y, {"states": new_state, "state0": cache["state"]}
     return y, {"state": new_state}
+
+
+# ---------------------------------------------------------------------------
+# Speculative-verify commit: rewind the staged per-position states to each
+# row's accepted length (batched; replaces per-slot snapshot+replay)
+# ---------------------------------------------------------------------------
+
+
+def _gather_states(states, state0, ns, valid):
+    """Pick state after input ``ns[b]`` per row from per-position stacks
+    (each [B, S, ...]); invalid rows keep their pre-verify state."""
+    S = jax.tree.leaves(states)[0].shape[1]
+    idx = jnp.clip(ns - 1, 0, S - 1)
+
+    def pick(stack, old):
+        ix = idx.reshape((-1,) + (1,) * (stack.ndim - 1))
+        sel = jnp.take_along_axis(stack, ix, axis=1)[:, 0]
+        v = valid.reshape((-1,) + (1,) * (old.ndim - 1))
+        return jnp.where(v, sel, old)
+
+    return jax.tree.map(pick, states, state0)
+
+
+def mlstm_verify_commit(staged, ns, valid):
+    """staged: {"states": (C,n,m) each [B,S,...], "state0", "xs"} from
+    ``apply_mlstm(mode="verify")``. Returns the committed
+    {"state", "conv"} cache at each row's accepted length."""
+    state = _gather_states(staged["states"], staged["state0"], ns, valid)
+    xs = staged["xs"]                                       # [B, S+W-1, F2]
+    S = staged["states"][2].shape[1]
+    W1 = xs.shape[1] - S
+    n_eff = jnp.where(valid, jnp.clip(ns, 0, S), 0)
+    conv = jax.vmap(
+        lambda row, n: jax.lax.dynamic_slice_in_dim(row, n, W1, axis=0)
+    )(xs, n_eff)
+    return {"state": state, "conv": conv}
+
+
+def slstm_verify_commit(staged, ns, valid):
+    """staged: {"states": (c,n,h,m) each [B,S,D], "state0"} from
+    ``apply_slstm(mode="verify")``."""
+    return {"state": _gather_states(staged["states"], staged["state0"],
+                                    ns, valid)}

@@ -36,14 +36,15 @@ Fast-path structure (see benchmarks/serving_bench.py for the measurements):
   acceptance (marginals provably match non-speculative sampling). FAME's
   copy-heavy outputs (tool results / log lines re-surfaced in answers)
   accept most drafts, cutting forwards-per-token several-fold
-  (benchmarks/spec_bench.py). Full-attention archs verify batched with
-  mask-free rollback (dense rows or paged block tables — over-written
-  rejected K/V is position-masked until overwritten, and page-granular
-  accounting returns unused pages at finalize); recurrent / conv / xLSTM /
-  ring-KV archs verify per-slot via ``extend`` with a cache-row snapshot
-  spliced back + length-masked replay on partial accept. Slots whose
-  acceptance rate drops below ``spec_min_accept`` stop drafting; steps with
-  no drafts anywhere fall back to the chunked decode loop.
+  (benchmarks/spec_bench.py). EVERY arch takes the batched path: linear
+  full-attention caches roll back for free (rejected K/V is position-masked
+  until overwritten — dense rows or paged block tables); recurrent / conv /
+  mLSTM / sLSTM / ring-KV blocks stage per-position states during the
+  verify forward and ``model.verify_commit`` gathers the state at each
+  row's accepted length inside the same jit (accept-length state rewind —
+  no per-slot replay forward). Slots whose acceptance rate drops below
+  ``spec_min_accept`` stop drafting; steps with no drafts anywhere fall
+  back to the chunked decode loop.
 * **Paged KV + radix prefix sharing** — ``EngineConfig(cache_mode="paged")``
   swaps the dense per-slot cache rows for one pool of fixed-size KV pages
   (serving/kvpool.py) with per-request block tables, indexed by a radix
@@ -59,6 +60,18 @@ Fast-path structure (see benchmarks/serving_bench.py for the measurements):
   radix block move (stably) to the queue front so one engine step admits
   the whole group while the shared pages are pinned and hot
   (``stats()["grouped_admissions"]``).
+* **Per-prefix recurrent-state snapshots** — ``cache_mode="paged"`` on a
+  *stateful* arch (recurrent / conv / mLSTM / sLSTM / ring-KV; no shareable
+  pages, but O(1) decode state) keeps the dense per-slot cache rows and
+  shares prefixes through the same radix trie with a pooled snapshot arena
+  instead: after prefilling up to a radix-block boundary the engine splices
+  the slot's complete fixed-size state (recurrent h, conv window,
+  mLSTM/sLSTM state, ring KV + implicit write cursor) into one arena row
+  and hands it to the trie node. A later request that radix-matches the
+  prefix restores the nearest boundary snapshot into its slot and prefills
+  only the suffix — the exact prefix-reuse the paged path gives attention
+  archs, at O(1) storage per boundary (``stats()["snapshot_hits"]`` etc.;
+  benchmarks/prefix_bench.py measures it with ``--arch recurrentgemma-9b``).
 
 On CPU it runs reduced configs end-to-end (agents in examples/serve_agents.py
 talk to it); on the production mesh the same functions lower through
@@ -112,6 +125,21 @@ def _slot_splice(cache, cache1, slot):
             for k in cache}
 
 
+def _select_rows(new_cache, old_cache, keep):
+    """Per-row cache select: rows with ``keep`` take the new cache, the rest
+    keep the old one bit-exactly. Scan leaves are [L, B, ...], tail leaves
+    [B, ...] (the _slot_extract convention)."""
+    def _scan_sel(n, o):
+        return jnp.where(keep.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o)
+
+    def _tail_sel(n, o):
+        return jnp.where(keep.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+
+    return {k: jax.tree.map(_scan_sel if k == "scan" else _tail_sel,
+                            new_cache[k], old_cache[k])
+            for k in new_cache}
+
+
 def _auto_buckets(capacity: int, lo: int = 32) -> Tuple[int, ...]:
     """Power-of-two prompt-length buckets up to (and including) capacity."""
     buckets = []
@@ -140,15 +168,29 @@ class EngineConfig:
     donate:          donate the shared cache to prefill/decode jits
                      (None → auto: on everywhere except CPU, where XLA
                      ignores donation and warns).
-    cache_mode:      "dense" (PR-1 per-slot cache rows) or "paged" (one page
-                     pool + per-request block tables + radix prefix sharing;
-                     full-attention archs only — see kvpool.supports_paged).
+    cache_mode:      "dense" (PR-1 per-slot cache rows) or "paged" (radix
+                     prefix sharing). On full-attention archs "paged" means
+                     one KV page pool + per-request block tables
+                     (kvpool.supports_paged); on stateful archs (recurrent /
+                     conv / xLSTM / ring-KV — kvpool.supports_snapshots) it
+                     keeps dense rows and shares prefixes through per-prefix
+                     recurrent-state snapshots instead.
     page_size:       KV tokens per page in paged mode; capacity is rounded up
                      to a multiple of it. Smaller pages share finer prefixes
-                     at more gather overhead.
+                     at more gather overhead. Snapshot mode reuses it as the
+                     radix block granularity.
     num_pages:       device pages in the pool (None → auto: trash page +
                      2 × num_slots × pages-per-request, leaving headroom for
                      retained prefixes before LRU eviction kicks in).
+    num_snapshots:   snapshot-arena rows in snapshot mode (None → auto:
+                     ~num_slots × boundaries-per-request + headroom). Each
+                     row holds one complete per-sequence state, so memory is
+                     num_snapshots × state-size — size it to taste and let
+                     LRU eviction manage the rest.
+    snap_stride:     radix blocks between snapshot boundaries (1 = capture at
+                     every block, the finest prefix reuse; larger strides
+                     trade hit depth for fewer arena rows and fewer prefill
+                     chunk splits).
     spec_len:        max draft tokens per speculative verify step (0 = off).
                      A per-slot n-gram lookup drafter (serving/spec.py, no
                      draft model) proposes continuations; one verify forward
@@ -171,6 +213,8 @@ class EngineConfig:
     cache_mode: str = "dense"
     page_size: int = 16
     num_pages: Optional[int] = None
+    num_snapshots: Optional[int] = None
+    snap_stride: int = 1
     spec_len: int = 0
     spec_ngram_min: int = 2
     spec_ngram_max: int = 4
@@ -232,36 +276,41 @@ class ServingEngine:
         mode = self.engine_cfg.cache_mode
         if mode not in ("dense", "paged"):
             raise ValueError(f"cache_mode must be 'dense' or 'paged', got {mode!r}")
-        self.paged = mode == "paged"
+        # "paged" resolves per arch family: KV page pool for full-attention
+        # archs, per-prefix recurrent-state snapshots for stateful archs
+        self.paged = self.snapshots = False
+        if mode == "paged":
+            ok, why = kvpool.supports_paged(cfg)
+            if ok:
+                self.paged = True
+            else:
+                ok2, why2 = kvpool.supports_snapshots(cfg)
+                if not ok2:
+                    raise ValueError(
+                        f"cache_mode='paged' unsupported for {cfg.name}: "
+                        f"{why}; {why2}")
+                self.snapshots = True
         if self.engine_cfg.spec_len < 0:
             raise ValueError(
                 f"spec_len must be >= 0, got {self.engine_cfg.spec_len}")
         self.spec = self.engine_cfg.spec_len > 0
-        if self.spec:
-            if cfg.modality != "text":
-                raise ValueError(
-                    "speculative decoding needs token-id inputs; "
-                    f"modality={cfg.modality!r} has no n-gram stream to draft "
-                    "from")
-            # batched verify needs mask-free draft rollback, which only
-            # linear full-attention caches give — the same predicate that
-            # makes KV pages shareable. Other archs (recurrent / conv /
-            # xLSTM state, ring KV) speculate per-slot via extend with a
-            # pre-verify snapshot spliced back on partial accept.
-            self._spec_batched = kvpool.supports_paged(cfg)[0]
-        else:
-            self._spec_batched = False
+        if self.spec and cfg.modality != "text":
+            raise ValueError(
+                "speculative decoding needs token-id inputs; "
+                f"modality={cfg.modality!r} has no n-gram stream to draft "
+                "from")
+        # pure full-attention caches tolerate done-row decode writes (same
+        # position, same value — idempotent); every other cache family keeps
+        # real state that must be frozen for rows sitting a chunk out
+        self._freeze_done_rows = not kvpool.supports_paged(cfg)[0]
         bw = max(1, self.engine_cfg.block_w)
         if capacity > bw:
             capacity = -(-capacity // bw) * bw      # align to kernel block
         ps = self.engine_cfg.page_size
-        if self.paged:
-            ok, why = kvpool.supports_paged(cfg)
-            if not ok:
-                raise ValueError(f"cache_mode='paged' unsupported for "
-                                 f"{cfg.name}: {why}")
+        if self.paged or self.snapshots:
             if ps < 1:
                 raise ValueError(f"page_size must be >= 1, got {ps}")
+        if self.paged:
             capacity = -(-capacity // ps) * ps      # align to page size
         self.cfg = dataclasses.replace(cfg, decode_block_w=bw)
         self.model = Model(self.cfg)
@@ -289,6 +338,20 @@ class ServingEngine:
             self.cache = self.model.init_cache(num_slots, capacity)
             self.kvpool = None
             self.radix = None
+        if self.snapshots:
+            # snapshot mode: dense per-slot rows + a radix trie whose nodes
+            # own rows of a pooled snapshot arena (the model's cache pytree
+            # with batch axis = snapshot slots)
+            self.radix = RadixTree(ps)
+            stride = max(1, self.engine_cfg.snap_stride)
+            n_snaps = self.engine_cfg.num_snapshots
+            if n_snaps is None:
+                n_snaps = 1 + num_slots * (-(-capacity // (ps * stride)) + 2)
+            self.snaps = kvpool.SnapshotArena(n_snaps)
+            self.snap_arena = self.model.init_cache(n_snaps, capacity)
+        else:
+            self.snaps = None
+            self.snap_arena = None
         self.slots = [_Slot() for _ in range(num_slots)]
         self._queue: "collections.deque[Request]" = collections.deque()
         self._rng = jax.random.PRNGKey(seed + 1)
@@ -311,7 +374,10 @@ class ServingEngine:
         self._draft_tokens = 0                   # spec: tokens proposed
         self._accepted_tokens = 0                # spec: drafts verify accepted
         self._verify_steps = 0                   # spec: verify forwards run
-        self._grouped_admissions = 0             # paged: radix-grouped admits
+        self._grouped_admissions = 0             # paged/snap: radix-grouped
+        self._snap_hits = 0                      # snap: admissions restored
+        self._snap_misses = 0                    # ... or prefilled from zero
+        self._snap_captures = 0                  # snapshots spliced to arena
 
         donate = self.engine_cfg.donate
         if donate is None:
@@ -325,12 +391,16 @@ class ServingEngine:
         self._jit_extend_paged = jax.jit(self._extend_paged_fn,
                                          donate_argnums=dargs,
                                          static_argnames=("sample",))
+        if self.snapshots:
+            d0 = (0,) if donate else ()
+            self._jit_snap_capture = jax.jit(self._snap_capture_fn,
+                                             donate_argnums=d0)
+            self._jit_snap_restore = jax.jit(self._snap_restore_fn,
+                                             donate_argnums=d0)
         if self.spec:
+            # ONE jit per verify step for every arch: forward + accept +
+            # accept-length state rewind (model.verify_commit) fused
             self._jit_verify = jax.jit(self._verify_fn, donate_argnums=dargs)
-            # per-slot path: the snapshot row must survive the verify call,
-            # so the verify extend never donates its cache argument
-            self._jit_spec_extend = jax.jit(self._spec_extend_fn)
-            self._jit_accept = jax.jit(self._accept_fn)
 
     # ---- jit'd computations ------------------------------------------------
     def _prefill_fn(self, params, cache, tokens, positions, slot, length, key,
@@ -425,8 +495,19 @@ class ServingEngine:
                 batch = {"frames": toks, "positions": clens[:, None]}
             else:
                 batch = {"tokens": last[:, None], "positions": clens[:, None]}
-            logits, cache = self.model.decode_step(params, batch, cache, clens,
-                                                   block_tables=block_tables)
+            logits, new_cache = self.model.decode_step(params, batch, cache,
+                                                       clens,
+                                                       block_tables=block_tables)
+            if self._freeze_done_rows:
+                # stateful archs: a done-masked row must not keep advancing
+                # its recurrent / conv / mLSTM / sLSTM state on a stale
+                # input — above all a spec-handled slot sitting this chunk
+                # out, which continues decoding next step. Full-attention
+                # rows skip this (their stale write is position-masked and
+                # idempotent; their caches are also the big ones).
+                cache = _select_rows(new_cache, cache, ~done)
+            else:
+                cache = new_cache
             if temps is None:                   # statically greedy batch:
                 sub = key                       # no RNG / sort in the loop
             else:
@@ -449,49 +530,43 @@ class ServingEngine:
             jax.lax.while_loop(cond, body, st)
         return cache, tok_buf, emit_buf, cache_lens, remaining, done
 
-    # ---- speculative decode (drafter-free): jit'd verify + accept ----------
+    # ---- speculative decode (drafter-free): jit'd verify + accept + rewind -
     def _verify_fn(self, params, cache, tokens, clens, lens, temps, top_ks,
                    key, block_tables=None):
-        """One batched speculative verify step for every slot.
+        """One batched speculative verify step for every slot — any arch.
 
         tokens [B, S]: ``[last, d_1 .. d_k, pad]`` per row (S = spec_len+1),
         lens [B] = k+1 valid inputs (0 for rows sitting this verify out —
         empty, done, or undrafted slots: no writes, no commits; undrafted
         slots take the chunked decode loop this step instead). One forward
-        scores all draft positions; accept_batched commits the matched
-        prefix + a correction/bonus token per drafted row.
+        scores all draft positions (staging per-position states for stateful
+        blocks); accept_batched picks the matched prefix + a correction/
+        bonus token per drafted row; ``model.verify_commit`` then rewinds
+        every stateful block to its row's accepted length with gathers /
+        ring splices — all inside this one jit, no per-slot replay.
         """
         positions = clens[:, None] + jnp.arange(tokens.shape[1],
                                                 dtype=jnp.int32)[None, :]
         batch = {"tokens": tokens, "positions": positions}
-        logits, cache = self.model.verify(params, batch, cache, clens,
-                                          lens=lens,
-                                          block_tables=block_tables)
+        logits, staged = self.model.verify(params, batch, cache, clens,
+                                           lens=lens,
+                                           block_tables=block_tables)
         out_tok, out_len = accept_batched(
             logits, tokens, jnp.maximum(lens - 1, 0), key,
             temperature=temps, top_k=top_ks,
             vocab_limit=self.cfg.vocab_size, use_kernel=self.cfg.use_pallas)
+        cache = self.model.verify_commit(staged, clens, out_len, lens)
         return cache, out_tok, out_len
 
-    def _spec_extend_fn(self, params, cache, tokens, positions, slot, start,
-                        length):
-        """Per-slot verify for stateful archs (recurrent / conv / xLSTM /
-        ring KV): run ``extend`` over the draft chunk with per-position
-        logits. The caller snapshots the slot's cache row first; on partial
-        accept it splices the snapshot back and replays only the accepted
-        prefix (``_jit_extend`` with the real length), which the valid-prefix
-        masking in models/{rglru,xlstm,attention} makes bit-exact."""
-        cache1 = _slot_extract(cache, slot)
-        batch = {"tokens": tokens, "positions": positions}
-        logits, cache1 = self.model.extend(params, batch, cache1, start,
-                                           length=length, with_logits="all")
-        return _slot_splice(cache, cache1, slot), logits
+    # ---- per-prefix snapshot splices (snapshot mode) -----------------------
+    def _snap_capture_fn(self, arena, cache, sid, slot):
+        """Copy slot ``slot``'s complete state row into arena row ``sid``."""
+        return _slot_splice(arena, _slot_extract(cache, slot), sid)
 
-    def _accept_fn(self, logits, tokens, draft_lens, key, temps, top_ks):
-        return accept_batched(logits, tokens, draft_lens, key,
-                              temperature=temps, top_k=top_ks,
-                              vocab_limit=self.cfg.vocab_size,
-                              use_kernel=self.cfg.use_pallas)
+    def _snap_restore_fn(self, cache, arena, sid, slot):
+        """Restore arena row ``sid`` into slot ``slot`` — equivalent to
+        having prefilled the snapshot's prefix into that slot."""
+        return _slot_splice(cache, _slot_extract(arena, sid), slot)
 
     # ---- public API -----------------------------------------------------------
     def submit(self, prompt: str, *, max_new_tokens: int = 64,
@@ -556,23 +631,41 @@ class ServingEngine:
                 max(self._draft_tokens, 1),
             "verify_steps": self._verify_steps,
         }
-        if self.paged:
+        if self.paged or self.snapshots:
             out.update({
                 "page_size": self.engine_cfg.page_size,
-                "pages_total": self.kvpool.num_pages,
-                "pages_free": self.kvpool.num_free,
-                "pages_peak_in_use": self.kvpool.peak_in_use,
                 "radix_nodes": self.radix.num_nodes,
-                "radix_evicted_pages": self.radix.evicted_pages,
                 # the headline: prompt tokens served straight from shared
-                # pages instead of being re-prefilled
+                # pages / restored state snapshots instead of re-prefilled
                 "prefix_hit_tokens": self._prefix_hit_tokens,
                 "prefix_hit_rate": self._prefix_hit_tokens /
                     max(self._prompt_tokens, 1),
                 # queued requests admitted in the same engine step as an
                 # earlier request sharing their first radix block (the
-                # shared pages are matched while still pinned/hot)
+                # shared pages/snapshots are matched while still pinned/hot)
                 "grouped_admissions": self._grouped_admissions,
+            })
+        if self.paged:
+            out.update({
+                "pages_total": self.kvpool.num_pages,
+                "pages_free": self.kvpool.num_free,
+                "pages_peak_in_use": self.kvpool.peak_in_use,
+                "radix_evicted_pages": self.radix.evicted_pages,
+            })
+        if self.snapshots:
+            out.update({
+                # per-prefix recurrent-state snapshot arena: hits restore a
+                # boundary state instead of re-prefilling; misses prefill
+                # from scratch; evictions are LRU trie leaves reclaimed when
+                # the arena fills (tune num_snapshots / snap_stride from
+                # these)
+                "snapshots_total": self.snaps.num_snaps,
+                "snapshots_free": self.snaps.num_free,
+                "snapshots_peak_in_use": self.snaps.peak_in_use,
+                "snapshot_hits": self._snap_hits,
+                "snapshot_misses": self._snap_misses,
+                "snapshot_captures": self._snap_captures,
+                "snapshot_evictions": self.radix.evicted_snaps,
             })
         return out
 
@@ -629,34 +722,46 @@ class ServingEngine:
         self._prompt_tokens += len(ids)
         return ids
 
-    def _admit_dense(self, si: int, slot: _Slot, req: Request):
-        ids = self._encode_prompt(req)
-        plan = self._chunk_plan(len(ids), 0)
-        first = None
+    def _prefill_span(self, si: int, req: Request, ids: List[int],
+                      start: int, end: int, *, sample: bool):
+        """Prefill ``ids[start:end]`` into slot ``si`` in bucketed chunks.
+
+        ``start == 0`` opens with the PR-1 bucketed prefill (fresh cache
+        row — it always unembeds one position and samples; a non-final span
+        discards that token); every other chunk is an ``extend``
+        continuation against the already-filled row (restored snapshot
+        included) that unembeds + samples only when it is the last chunk
+        and ``sample``. Returns the last chunk's sampled token.
+        """
+        plan = self._chunk_plan(end - start, start)
+        tok = None
         for ci, (off, real, padded) in enumerate(plan):
-            tokens, positions = self._chunk_batch(ids[off:off + real], off,
-                                                  padded)
+            o = start + off
+            tokens, positions = self._chunk_batch(ids[o:o + real], o, padded)
             self._rng, k = jax.random.split(self._rng)
             self._pad_tokens += padded - real
-            if ci == 0:
-                # first chunk: the PR-1 bucketed prefill (fresh cache row)
+            last = ci == len(plan) - 1
+            if o == 0:
                 self._prefill_shapes.add((padded, self.cfg.modality))
-                self.cache, tok = self._jit_prefill(
+                self.cache, t = self._jit_prefill(
                     self.params, self.cache, tokens, positions,
                     jnp.int32(si), jnp.int32(real), k,
                     jnp.float32(req.temperature), jnp.int32(req.top_k))
             else:
-                # continuation chunks attend to the already-filled prefix;
-                # only the final chunk unembeds + samples
                 self._extend_shapes.add((padded, self.cfg.modality))
                 self._extend_chunks += 1
-                self.cache, tok = self._jit_extend(
+                self.cache, t = self._jit_extend(
                     self.params, self.cache, tokens, positions,
-                    jnp.int32(si), jnp.int32(off), jnp.int32(real), k,
+                    jnp.int32(si), jnp.int32(o), jnp.int32(real), k,
                     jnp.float32(req.temperature), jnp.int32(req.top_k),
-                    sample=ci == len(plan) - 1)
-            if ci == len(plan) - 1:
-                first = tok
+                    sample=sample and last)
+            if last:
+                tok = t
+        return tok
+
+    def _admit_dense(self, si: int, slot: _Slot, req: Request):
+        ids = self._encode_prompt(req)
+        first = self._prefill_span(si, req, ids, 0, len(ids), sample=True)
         slot.request = req
         slot.cache_len = len(ids)
         slot.remaining = req.max_new_tokens - 1
@@ -725,6 +830,73 @@ class ServingEngine:
         self._group_queue(ids)
         return True
 
+    def _capture_snapshot(self, si: int) -> int:
+        """Splice slot ``si``'s current state into a fresh arena row.
+        Returns the slot id, or -1 when the arena stays full even after LRU
+        trie eviction (every row backs a pinned path) — the capture is then
+        skipped; correctness is untouched, only future hit depth."""
+        sid = self.snaps.alloc()
+        if sid is None:
+            self.snaps.free(self.radix.evict_snaps(1))
+            sid = self.snaps.alloc()
+        if sid is None:
+            return -1
+        self.snap_arena = self._jit_snap_capture(self.snap_arena, self.cache,
+                                                 jnp.int32(sid),
+                                                 jnp.int32(si))
+        self._snap_captures += 1
+        return sid
+
+    def _admit_snap(self, si: int, slot: _Slot, req: Request):
+        """Snapshot-mode admission (stateful archs under cache_mode="paged"):
+        radix-match the prompt, restore the nearest per-prefix state
+        snapshot into the slot, and prefill only the suffix — capturing new
+        snapshots at every ``snap_stride``-block boundary along the way and
+        adopting them into the trie immediately, so the rest of THIS engine
+        step's grouped admissions already reuse them. Never fails: snapshots
+        take no pages, and a full arena only skips captures."""
+        ids = self._encode_prompt(req)
+        ps = self.engine_cfg.page_size
+        # always recompute at least the last prompt token (its logits seed
+        # the first sampled token), so cap the usable match one token short
+        _, node = self.radix.match(ids[:len(ids) - 1])
+        sid, sblocks = self.radix.nearest_snapshot(node)
+        restore = sblocks * ps
+        if sid >= 0:
+            self.cache = self._jit_snap_restore(self.cache, self.snap_arena,
+                                                jnp.int32(sid), jnp.int32(si))
+            self._snap_hits += 1
+        else:
+            self._snap_misses += 1
+        req.prefix_hit_tokens = restore
+        self._prefix_hit_tokens += restore
+        stride = ps * max(1, self.engine_cfg.snap_stride)
+        bounds = set(range((restore // stride + 1) * stride,
+                           len(ids) + 1, stride))
+        new_snaps = {}
+        pos, first = restore, None
+        for end in sorted(bounds | {len(ids)}):
+            first = self._prefill_span(si, req, ids, pos, end,
+                                       sample=end == len(ids))
+            if end in bounds:
+                s = self._capture_snapshot(si)
+                if s >= 0:
+                    new_snaps[end // ps] = s
+            pos = end
+        if new_snaps:
+            hi = max(new_snaps) * ps
+            self.snaps.free(self.radix.insert_snaps(ids[:hi], new_snaps))
+        slot.request = req
+        slot.cache_len = len(ids)
+        slot.remaining = req.max_new_tokens - 1
+        slot.generated = [int(first)]                     # one host sync
+        slot.token_ids = ids
+        slot.node = node
+        self._arm_spec(slot, ids)
+        self._prefill_syncs += 1
+        self._group_queue(ids)
+        return True
+
     def _arm_spec(self, slot: _Slot, ids: List[int]):
         """Index the request's context for the n-gram drafter (prompt + the
         first sampled token; decode/verify commits extend it)."""
@@ -774,8 +946,10 @@ class ServingEngine:
                 continue
             req = self._queue[0]
             t0 = time.perf_counter()
-            admitted = (self._admit_paged(si, slot, req) if self.paged
-                        else self._admit_dense(si, slot, req))
+            admit = (self._admit_paged if self.paged else
+                     self._admit_snap if self.snapshots else
+                     self._admit_dense)
+            admitted = admit(si, slot, req)
             if not admitted:
                 if not self._active():
                     raise RuntimeError(
@@ -819,6 +993,11 @@ class ServingEngine:
             self.kvpool.free(rejected + bt_pages[n_complete:])
             self.radix.release(slot.node)
             self._bt_device = None      # slot membership changed
+        elif self.snapshots:
+            # snapshots were adopted into the trie at admission (and the
+            # end-of-generation state is not block-aligned, so there is
+            # nothing further to donate) — just unpin the matched node
+            self.radix.release(slot.node)
         self.slots[si] = _Slot()
 
     # ---- speculative decode pass -------------------------------------------
@@ -857,17 +1036,16 @@ class ServingEngine:
             return set()
         # only drafted slots verify; the rest keep the chunked decode loop
         # (a disabled or draftless slot must not degrade to one-token steps)
-        if self._spec_batched:
-            self._spec_step_batched(drafted, drafts)
-        else:
-            self._spec_step_perslot(drafted, drafts)
+        self._spec_step_batched(drafted, drafts)
         return set(drafted)
 
     def _spec_step_batched(self, live, drafts):
-        """Full-attention archs: ONE jit'd verify forward scores every
-        drafted slot's proposal at once (rows of undrafted slots carry
-        lens=0 — no reads, no writes, no commit); rollback is free —
-        rejected-draft K/V is masked by cache position until overwritten."""
+        """ONE jit'd verify forward scores every drafted slot's proposal at
+        once, for every arch (rows of undrafted slots carry lens=0 — no
+        reads, no writes, no commits). Rollback: linear full-attention K/V
+        is masked by cache position until overwritten; recurrent / conv /
+        xLSTM / ring-KV state rewinds to each row's accepted length inside
+        the same jit (``model.verify_commit``)."""
         t0 = time.perf_counter()
         S = self.engine_cfg.spec_len + 1
         tok_rows = [[0] * S for _ in range(self.num_slots)]
@@ -909,55 +1087,6 @@ class ServingEngine:
         for i in live:
             self._commit_spec(i, drafts[i], out_tok[i], int(out_len[i]),
                               dt / len(live))
-
-    def _spec_step_perslot(self, idxs, drafts):
-        """Stateful archs (recurrent / conv / xLSTM state, ring KV): verify
-        via ``extend`` one slot at a time with a pre-verify cache-row
-        snapshot. Full accept commits the extend as-is; partial accept
-        splices the snapshot back and replays only the accepted prefix —
-        the valid-prefix masking in models/{rglru,xlstm,attention} makes the
-        rewound state bit-exact, at the cost of one extra (cheap, logit-free)
-        extend on the rollback path."""
-        S = self.engine_cfg.spec_len + 1
-        pad = self.tokenizer.pad_id
-        for i in idxs:
-            t0 = time.perf_counter()
-            slot = self.slots[i]
-            d = drafts[i]
-            row = [slot.generated[-1]] + d
-            n_in = len(row)
-            tokens = jnp.asarray([row + [pad] * (S - n_in)], jnp.int32)
-            start = slot.cache_len
-            positions = start + jnp.arange(S, dtype=jnp.int32)[None, :]
-            snap = _slot_extract(self.cache, i)      # pre-verify checkpoint
-            self.cache, logits = self._jit_spec_extend(
-                self.params, self.cache, tokens, positions, jnp.int32(i),
-                jnp.int32(start), jnp.int32(n_in))
-            req = slot.request
-            sampling = req.temperature > 0.0
-            temps = (jnp.asarray([req.temperature], jnp.float32)
-                     if sampling else None)
-            top_ks = (jnp.asarray([req.top_k], jnp.int32)
-                      if sampling and req.top_k > 0 else None)
-            self._rng, k = jax.random.split(self._rng)
-            out_tok, out_len = self._jit_accept(
-                logits, tokens, jnp.asarray([n_in - 1], jnp.int32), k,
-                temps, top_ks)
-            out_tok, out_len = jax.device_get((out_tok, out_len))
-            n = int(out_len[0])
-            self._decode_syncs += 1
-            self._verify_steps += 1
-            if n < n_in:
-                # partial accept: restore the checkpoint, replay the
-                # accepted prefix only (length-masked extend, no logits)
-                self.cache = _slot_splice(self.cache, snap, i)
-                self._rng, k2 = jax.random.split(self._rng)
-                self.cache, _ = self._jit_extend(
-                    self.params, self.cache, tokens, positions, jnp.int32(i),
-                    jnp.int32(start), jnp.int32(n), k2, jnp.float32(0.0),
-                    jnp.int32(0), sample=False)
-            self._commit_spec(i, d, out_tok[0], n,
-                              time.perf_counter() - t0)
 
     def _commit_spec(self, si, draft, out_row, n, dt):
         """Commit one slot's verify outcome: n = accepted drafts + 1

@@ -57,9 +57,14 @@ def test_supports_paged_gating():
     for arch in ("recurrentgemma-9b", "xlstm-350m", "mixtral-8x22b"):
         ok, why = supports_paged(_cfg(arch))
         assert not ok and why
-    with pytest.raises(ValueError):
-        ServingEngine(_cfg("mixtral-8x22b"), num_slots=1, capacity=64,
-                      engine_cfg=EngineConfig(cache_mode="paged"))
+        # ... but cache_mode="paged" still works: stateful archs resolve to
+        # per-prefix recurrent-state snapshot sharing (tests/test_snapshots)
+        eng = ServingEngine(_cfg(arch), num_slots=1, capacity=64,
+                            engine_cfg=EngineConfig(cache_mode="paged"))
+        assert eng.snapshots and not eng.paged
+    full = ServingEngine(_cfg("qwen2.5-3b"), num_slots=1, capacity=64,
+                         engine_cfg=EngineConfig(cache_mode="paged"))
+    assert full.paged and not full.snapshots
 
 
 # ---------------------------------------------------------------------------

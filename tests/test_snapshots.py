@@ -1,0 +1,299 @@
+"""Per-prefix recurrent-state snapshots: arena/trie ownership, batched
+verify accept-rewind for stateful archs, and snapshot-mode (cache_mode=
+"paged" on recurrent/xLSTM/ring archs) engine equivalence — greedy outputs
+must be identical to dense while prefilling only radix-missed suffixes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models import Model
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.kvpool import SnapshotArena, supports_snapshots
+from repro.serving.radix import RadixTree
+
+from tests._hypothesis_compat import given, settings, st
+
+SNAP_ARCHS = ["recurrentgemma-9b", "xlstm-350m", "mixtral-8x22b"]
+
+
+def _cfg(arch, **over):
+    return ARCHS[arch].reduced(dtype="float32", param_dtype="float32",
+                               vocab_size=512, **over)
+
+
+# ---------------------------------------------------------------------------
+# gating + arena allocator
+# ---------------------------------------------------------------------------
+
+
+def test_supports_snapshots_gating():
+    for arch in SNAP_ARCHS:
+        ok, why = supports_snapshots(_cfg(arch))
+        assert ok, (arch, why)
+    # full-attention KV grows with the prefix -> pages, not snapshots
+    ok, why = supports_snapshots(_cfg("qwen2.5-3b"))
+    assert not ok and why
+
+
+def test_snapshot_arena_alloc_free_roundtrip():
+    arena = SnapshotArena(3)
+    a, b, c = arena.alloc(), arena.alloc(), arena.alloc()
+    assert sorted([a, b, c]) == [0, 1, 2]
+    assert arena.alloc() is None and arena.num_free == 0
+    assert arena.peak_in_use == 3
+    arena.free([b])
+    assert arena.num_free == 1
+    with pytest.raises(ValueError):
+        arena.free([b])                        # double free
+    with pytest.raises(ValueError):
+        arena.free([7])                        # out of range
+    with pytest.raises(ValueError):
+        SnapshotArena(0)
+
+
+# ---------------------------------------------------------------------------
+# radix trie: snapshot payloads
+# ---------------------------------------------------------------------------
+
+
+def test_radix_snapshot_insert_match_nearest():
+    t = RadixTree(4)
+    toks = list(range(12))                     # 3 complete blocks
+    # snapshots at block boundaries 1 and 3
+    assert t.insert_snaps(toks, {1: 7, 3: 9}) == []
+    _, node = t.match(toks)
+    assert t.nearest_snapshot(node) == (9, 3)
+    # a prompt diverging after 2 blocks falls back to the depth-1 snapshot
+    _, node2 = t.match(toks[:8] + [99, 98, 97, 96])
+    assert t.nearest_snapshot(node2) == (7, 1)
+    # duplicate boundary keeps the incumbent; depth out of range rejected
+    assert sorted(t.insert_snaps(toks, {1: 11, 9: 12})) == [11, 12]
+    t.release(node)
+    t.release(node2)
+    assert set(t.cached_snaps) == {7, 9}
+    t.check_invariants(snapshots=True)
+
+
+def test_radix_snapshot_eviction_lru_and_pinning():
+    t = RadixTree(2)
+    t.insert_snaps([1, 2, 3, 4], {2: 5})
+    _, node = t.match([1, 2, 3, 4])            # pins the deepest node
+    assert t.evict_snaps(5) == []              # pinned path survives
+    t.release(node)
+    freed = t.evict_snaps(5)
+    assert freed == [5] and t.evicted_snaps == 1
+    assert t.num_nodes == 0                    # snap-less path nodes removed
+
+
+# ---------------------------------------------------------------------------
+# model level: batched verify accept-rewind == sequential decode state
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", SNAP_ARCHS)
+def test_verify_commit_rewinds_state_to_accept_length(arch):
+    """mode="verify" on a stateful arch stages per-position states; commit
+    at ANY accepted length must reproduce the cache a sequential decode of
+    exactly that many tokens builds (the batched replacement for per-slot
+    snapshot + replay), and a lens=0 row must keep its cache bit-exactly."""
+    cfg = _cfg(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    P, S, cap = 11, 5, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, P + S), 0,
+                              cfg.vocab_size)
+    cache = model.init_cache(1, cap)
+    _, cache = model.prefill(params, model.make_batch(toks[:, :P]), cache,
+                             length=jnp.int32(P))
+    clens = jnp.asarray([P], jnp.int32)
+    lens = jnp.asarray([S], jnp.int32)
+    logits_v, staged = model.verify(params, model.make_batch(toks[:, P:],
+                                                             start=P),
+                                    cache, clens, lens=lens)
+    refs, c = [], cache
+    seq_caches = []
+    for i in range(S):
+        lg, c = model.decode_step(params,
+                                  model.make_batch(toks[:, P + i:P + i + 1],
+                                                   start=P + i),
+                                  c, jnp.asarray([P + i], jnp.int32))
+        refs.append(lg[:, 0])
+        seq_caches.append(c)
+    ref = jnp.stack(refs, axis=1)
+    assert float(jnp.max(jnp.abs(logits_v - ref))) < 2e-4, arch
+    for n in (1, S // 2 + 1, S):               # partial and full accepts
+        committed = model.verify_commit(staged, clens,
+                                        jnp.asarray([n], jnp.int32), lens)
+        want = seq_caches[n - 1]
+        for leaf_c, leaf_w in zip(jax.tree.leaves(committed),
+                                  jax.tree.leaves(want)):
+            assert float(jnp.max(jnp.abs(leaf_c - leaf_w))) < 2e-4, (arch, n)
+    # a row that sat the verify out keeps its pre-verify cache bit-exactly
+    _, staged0 = model.verify(params, model.make_batch(toks[:, P:], start=P),
+                              cache, clens, lens=jnp.asarray([0], jnp.int32))
+    kept = model.verify_commit(staged0, clens, jnp.asarray([1], jnp.int32),
+                               jnp.asarray([0], jnp.int32))
+    for leaf_k, leaf_o in zip(jax.tree.leaves(kept), jax.tree.leaves(cache)):
+        assert float(jnp.max(jnp.abs(leaf_k - leaf_o))) == 0.0, arch
+
+
+# ---------------------------------------------------------------------------
+# engine: snapshot mode == dense, bit for bit (greedy), with real reuse
+# ---------------------------------------------------------------------------
+
+SYS = ("You are one of several cooperating agents sharing this exact system "
+       "prompt and the same conversation history prefix. ")
+TURNS = ["Plan the next step of the task.",
+         "Act: call the search tool now.",
+         "Evaluate the tool output please.",
+         "Plan the next step of the task."]   # exact repeat of turn 0
+
+
+@pytest.mark.parametrize("arch", SNAP_ARCHS)
+def test_snapshot_equals_dense_greedy(arch):
+    cfg = _cfg(arch)
+    dense = ServingEngine(cfg, num_slots=3, capacity=128)
+    snap = ServingEngine(cfg, num_slots=3, capacity=128, params=dense.params,
+                         engine_cfg=EngineConfig(cache_mode="paged",
+                                                 page_size=16))
+    assert snap.snapshots and not snap.paged
+    prompts = [SYS + t for t in TURNS]
+    d = [dense.generate(p, max_new_tokens=8) for p in prompts]
+    s = [snap.generate(p, max_new_tokens=8) for p in prompts]
+    assert d == s, arch
+    st = snap.stats()
+    assert st["snapshot_hits"] >= 2            # later turns restored state
+    assert st["prefix_hit_tokens"] > 0
+    assert st["prefix_hit_rate"] > 0.2
+    assert st["snapshot_captures"] > 0
+
+
+def test_snapshot_spec_combo_equals_dense():
+    """Snapshots + speculative decoding together: the radix-restored state
+    feeds the batched verify path and outputs stay identical to the plain
+    dense engine."""
+    cfg = _cfg("recurrentgemma-9b")
+    dense = ServingEngine(cfg, num_slots=2, capacity=128)
+    both = ServingEngine(cfg, num_slots=2, capacity=128, params=dense.params,
+                         engine_cfg=EngineConfig(cache_mode="paged",
+                                                 page_size=16, spec_len=6))
+    prompts = [SYS + "Tool result: ERROR 429 rate limit. " * 2] * 2
+    d = [dense.generate(p, max_new_tokens=32) for p in prompts]
+    b = [both.generate(p, max_new_tokens=32) for p in prompts]
+    assert d == b
+    assert both.stats()["snapshot_hits"] >= 1  # the repeat restored state
+
+
+def test_snapshot_stride_trades_hit_depth():
+    """A coarser snap_stride captures fewer snapshots and still matches
+    dense outputs; hits restore at the coarser boundary."""
+    cfg = _cfg("xlstm-350m")
+    dense = ServingEngine(cfg, num_slots=2, capacity=128)
+    coarse = ServingEngine(cfg, num_slots=2, capacity=128,
+                           params=dense.params,
+                           engine_cfg=EngineConfig(cache_mode="paged",
+                                                   page_size=16,
+                                                   snap_stride=2))
+    fine = ServingEngine(cfg, num_slots=2, capacity=128, params=dense.params,
+                         engine_cfg=EngineConfig(cache_mode="paged",
+                                                 page_size=16))
+    prompts = [SYS + t for t in TURNS[:3]]
+    d = [dense.generate(p, max_new_tokens=6) for p in prompts]
+    assert [coarse.generate(p, max_new_tokens=6) for p in prompts] == d
+    assert [fine.generate(p, max_new_tokens=6) for p in prompts] == d
+    assert (coarse.stats()["snapshot_captures"]
+            < fine.stats()["snapshot_captures"])
+    assert (coarse.stats()["prefix_hit_tokens"]
+            <= fine.stats()["prefix_hit_tokens"])
+
+
+def test_snapshot_arena_exhaustion_skips_capture_not_correctness():
+    """A deliberately tiny arena forces LRU trie eviction and, once every
+    row backs a pinned path, capture skips — outputs must stay identical to
+    dense and the accounting exact."""
+    cfg = _cfg("recurrentgemma-9b")
+    dense = ServingEngine(cfg, num_slots=2, capacity=128)
+    tiny = ServingEngine(cfg, num_slots=2, capacity=128, params=dense.params,
+                         engine_cfg=EngineConfig(cache_mode="paged",
+                                                 page_size=16,
+                                                 num_snapshots=2))
+    prompts = [SYS + t for t in TURNS] + ["an unrelated prompt " * 3]
+    d = [dense.generate(p, max_new_tokens=6) for p in prompts]
+    s = [tiny.generate(p, max_new_tokens=6) for p in prompts]
+    assert d == s
+    st = tiny.stats()
+    assert st["snapshot_evictions"] > 0
+    owned = tiny.radix.check_invariants(snapshots=True)
+    assert len(owned) == tiny.snaps.num_in_use
+
+
+# ---------------------------------------------------------------------------
+# snapshot slots never leak (hypothesis) — the PR-3 page-leak test's twin
+# ---------------------------------------------------------------------------
+
+_LEAK_ENGINE = None
+
+
+def _leak_engine():
+    global _LEAK_ENGINE
+    if _LEAK_ENGINE is None:
+        cfg = _cfg("recurrentgemma-9b")
+        # tiny arena (eviction pressure) + spec_len (partial-accept rewind
+        # pressure) + decode_chunk=4 (verify interleaves with the loop)
+        _LEAK_ENGINE = ServingEngine(
+            cfg, num_slots=2, capacity=64,
+            engine_cfg=EngineConfig(cache_mode="paged", page_size=8,
+                                    num_snapshots=5, spec_len=5,
+                                    decode_chunk=4))
+    return _LEAK_ENGINE
+
+
+def _leak_check(eng):
+    assert all(s.request is None for s in eng.slots)
+    owned = eng.radix.check_invariants(snapshots=True)
+    free = set(eng.snaps._free)
+    assert not (owned & free)
+    # exactly-once ownership: every arena row is free or trie-owned
+    assert len(owned) + len(free) == eng.snaps.num_snaps
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(2, 16)),
+                min_size=4, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_snapshot_no_slot_leak(reqs):
+    """~500 snapshot-mode requests across examples (shared prefixes, random
+    budgets, LRU eviction from the deliberately tiny arena, frequent draft
+    rejections rewinding restored state): after every drain each arena row
+    is owned exactly once — free list or radix tree — so capture / restore /
+    eviction / rejected-duplicate insert never leaks or double-frees."""
+    eng = _leak_engine()
+    pool = ["err 429 err 429 err 429. " + t for t in
+            ("", "tail one", "go go go go go", "a longer tail that repeats "
+             "and repeats and repeats")]
+    for variant, budget in reqs:
+        eng.submit(pool[variant], max_new_tokens=budget)
+    eng.run_until_drained()
+    _leak_check(eng)
+
+
+def test_snapshot_leak_engine_exercised():
+    """Companion gate (and no-hypothesis fallback): the shared leak engine
+    must actually capture, restore, AND evict — a silent never-snapshotted
+    run would make the leak property vacuous."""
+    import random
+    eng = _leak_engine()
+    rng = random.Random(0)
+    pool = ["err 429 err 429 err 429. " + t for t in
+            ("", "tail one", "go go go go go", "a longer tail that repeats "
+             "and repeats and repeats")]
+    for _ in range(8):
+        for _ in range(rng.randint(4, 12)):
+            eng.submit(pool[rng.randrange(4)],
+                       max_new_tokens=rng.randint(2, 16))
+        eng.run_until_drained()
+        _leak_check(eng)
+    st = eng.stats()
+    assert st["snapshot_captures"] > 0
+    assert st["snapshot_hits"] > 0
+    assert st["snapshot_evictions"] > 0

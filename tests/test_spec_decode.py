@@ -283,10 +283,12 @@ def test_spec_greedy_identical_batched_verify(mode):
 
 @pytest.mark.parametrize("arch", ["recurrentgemma-9b", "xlstm-350m",
                                   "mixtral-8x22b"])
-def test_spec_greedy_identical_perslot_rollback(arch):
-    """Stateful archs (recurrent / conv / xLSTM state, ring KV) speculate
-    per-slot with a snapshot + length-masked replay on partial accept; a
-    rejected draft must leave recurrent state and ring caches bit-exact."""
+def test_spec_greedy_identical_stateful_batched_verify(arch):
+    """Stateful archs (recurrent / conv / xLSTM state, ring KV) now take the
+    same ONE-jit'd-verify-per-step path as full attention: per-position
+    states staged during the forward, accept-length state rewind inside the
+    verify jit. A rejected draft must leave recurrent state and ring caches
+    exactly as non-speculative decode builds them."""
     cfg = _cfg(arch)
     base = ServingEngine(cfg, num_slots=2, capacity=128)
     spec = ServingEngine(cfg, num_slots=2, capacity=128, params=base.params,
@@ -294,6 +296,32 @@ def test_spec_greedy_identical_perslot_rollback(arch):
     b = [base.generate(p, max_new_tokens=40) for p in COPY_PROMPTS[:2]]
     s = [spec.generate(p, max_new_tokens=40) for p in COPY_PROMPTS[:2]]
     assert b == s, arch
+    # batched means batched: one host sync per verify step (the per-slot
+    # replay path — 1-2 syncs per drafted slot per step — is gone)
+    st = spec.stats()
+    assert st["host_syncs"] == st["verify_steps"] + st["decode_chunks"]
+    assert not hasattr(spec, "_jit_spec_extend")
+
+
+def test_spec_stateful_batched_submit_freezes_sitting_rows():
+    """Regression: a spec-handled slot sits the same step's decode chunk out
+    via the done mask — the chunk must then FREEZE that row's recurrent /
+    conv / mLSTM / sLSTM state (a stale-input state advance is not
+    idempotent the way a full-attention re-write is). Batched submits with
+    interleaved verify + chunk steps diverged from base before the
+    engine's done-row state freeze."""
+    cfg = _cfg("xlstm-350m")
+    base = ServingEngine(cfg, num_slots=3, capacity=160)
+    spec = ServingEngine(cfg, num_slots=3, capacity=160, params=base.params,
+                         engine_cfg=EngineConfig(spec_len=6))
+    prompts = [f"[agent {i}] status flaps: " + "err 429; ok 200; " * 6
+               for i in range(3)]
+    outs = {}
+    for name, eng in (("base", base), ("spec", spec)):
+        reqs = [eng.submit(p, max_new_tokens=48) for p in prompts]
+        eng.run_until_drained()
+        outs[name] = [r.output_text for r in reqs]
+    assert outs["base"] == outs["spec"]
 
 
 def test_spec_mixed_batch_and_queue_pressure():

@@ -1,0 +1,45 @@
+#!/usr/bin/env python3
+"""CI docs gate: every intra-repo markdown link must resolve to a real file.
+
+Scans all tracked-ish ``*.md`` files for ``[text](target)`` links, skips
+external schemes (http/https/mailto) and pure anchors, and fails listing
+every target whose path (relative to the linking file) does not exist.
+
+    python tools/check_md_links.py [root]
+"""
+import pathlib
+import re
+import sys
+
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".hypothesis", ".venv",
+             "node_modules"}
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = re.compile(r"^([a-zA-Z][a-zA-Z0-9+.-]*:)")
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    bad = []
+    checked = 0
+    for md in sorted(root.rglob("*.md")):
+        if SKIP_DIRS & set(md.parts):
+            continue
+        for m in LINK.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if EXTERNAL.match(target) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0].split("?", 1)[0]
+            if not path:
+                continue
+            checked += 1
+            if not (md.parent / path).exists():
+                bad.append(f"{md.relative_to(root)}: broken link -> {target}")
+    if bad:
+        print("\n".join(bad))
+        return 1
+    print(f"check_md_links: OK ({checked} intra-repo links resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,9 @@
-"""Serve a (reduced) assigned architecture behind the FAME agents: batched
-requests through the continuous-batching engine as the agents' LLM backend,
-on the serving fast path (bucketed prefill + chunked on-device decode).
+"""Serve a (reduced) assigned architecture behind concurrent FAME workflows
+through the session-oriented serving API: N workflows open N sessions on one
+``LLMServer``, every round their Planner/Actor/Evaluator turns are submitted
+as non-blocking handles BEFORE any is drained — so they co-batch inside the
+same engine steps — and each session's next turn restores the previous
+turn's end-of-generation state instead of re-prefilling the conversation.
 
     PYTHONPATH=src python examples/serve_agents.py --arch recurrentgemma-9b
 """
@@ -12,25 +15,32 @@ from repro.configs.registry import ARCHS
 from repro.core.config import CONFIGS
 from repro.core.llm import JaxLLM, rates_for_arch
 from repro.core.runtime import FameRuntime
-from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.server import EngineConfig, LLMServer, SamplingParams
+
+ROLES = [("planner", "Plan the next step toward the goal."),
+         ("actor", "Act: run the planned tool call."),
+         ("evaluator", "Evaluate the output; pass or retry.")]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b", choices=sorted(ARCHS))
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--workflows", type=int, default=3,
+                    help="concurrent agent workflows (one session each)")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="Planner/Actor/Evaluator rounds per workflow")
     ap.add_argument("--chunk", type=int, default=16,
                     help="decode tokens per jit'd inner loop")
     ap.add_argument("--block-w", type=int, default=256,
                     help="decode-attention KV block (cache capacity aligns to it)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
-    ap.add_argument("--cache-mode", default="dense", choices=("dense", "paged"),
-                    help="paged = radix prefix sharing: KV page pool on "
-                         "full-attention archs, per-prefix recurrent-state "
-                         "snapshots on stateful archs; agent turns that "
-                         "re-send the conversation prefix skip its prefill")
+    ap.add_argument("--cache-mode", default="paged", choices=("dense", "paged"),
+                    help="paged = radix prefix sharing + session tail reuse: "
+                         "KV page pool on full-attention archs, per-prefix "
+                         "recurrent-state snapshots on stateful archs; turns "
+                         "that extend their conversation skip its prefill")
     ap.add_argument("--spec-len", type=int, default=0,
                     help="speculative decode: max draft tokens per verify "
                          "step from the prompt n-gram lookup drafter "
@@ -40,30 +50,53 @@ def main():
 
     cfg = ARCHS[args.arch].reduced(dtype="float32", param_dtype="float32",
                                    vocab_size=512)
-    engine = ServingEngine(cfg, num_slots=args.slots, capacity=192,
-                           engine_cfg=EngineConfig(decode_chunk=args.chunk,
-                                                   block_w=args.block_w,
-                                                   cache_mode=args.cache_mode,
-                                                   spec_len=args.spec_len))
-    print(f"engine up: arch={cfg.name} slots={args.slots} "
-          f"buckets={list(engine.buckets)} chunk={args.chunk} "
+    server = LLMServer(cfg, num_slots=args.slots, capacity=512,
+                       engine_cfg=EngineConfig(decode_chunk=args.chunk,
+                                               block_w=args.block_w,
+                                               cache_mode=args.cache_mode,
+                                               spec_len=args.spec_len))
+    print(f"server up: arch={cfg.name} slots={args.slots} "
+          f"buckets={list(server.engine.buckets)} chunk={args.chunk} "
           f"cache={args.cache_mode} spec_len={args.spec_len}")
 
-    # 1) raw batched serving
+    # 1) N concurrent workflows: one session per workflow, handles co-batch
+    params = SamplingParams(max_new_tokens=10, temperature=args.temperature,
+                            top_k=args.top_k)
+    sessions = [server.open_session() for _ in range(args.workflows)]
+    convs = [f"System: cooperating agents, workflow {w}. Keep tool calls "
+             f"minimal, cite evidence. " for w in range(args.workflows)]
     t0 = time.time()
-    reqs = [engine.submit(f"request {i}: summarize the introduction of paper {i}",
-                          max_new_tokens=16, temperature=args.temperature,
-                          top_k=args.top_k) for i in range(args.requests)]
-    engine.run_until_drained()
+    toks = turns = 0
+    for r in range(args.rounds):
+        for role, ask in ROLES:
+            # submit EVERY workflow's turn before draining any — that is
+            # what lets the engine co-batch them in the same decode chunks
+            handles = [sessions[w].submit(convs[w] + f"[{role} r{r}] {ask} ",
+                                          params)
+                       for w in range(args.workflows)]
+            if r == 0 and role == "planner":
+                # streaming demo on the first turn of workflow 0
+                print("streaming turn 0.0: ", end="")
+                for piece in handles[0].stream():
+                    print(repr(piece), end=" ")
+                print()
+            server.run_until_idle()
+            for w, h in enumerate(handles):
+                convs[w] = sessions[w].text
+                toks += h.request.output_tokens
+                turns += 1
     dt = time.time() - t0
-    toks = sum(r.output_tokens for r in reqs)
-    stats = engine.stats()
-    print(f"batched serving: {args.requests} requests, {toks} tokens, "
-          f"{dt:.1f}s wall ({toks / dt:.1f} tok/s on CPU interpret)")
+    stats = server.stats()
+    print(f"co-batched serving: {args.workflows} workflows x {turns // max(args.workflows, 1)} "
+          f"turns, {toks} tokens, {dt:.1f}s wall ({toks / dt:.1f} tok/s on CPU)")
     print(f"fast path: {stats['prefill_compiles']} prefill compiles over "
           f"{len(stats['prefill_buckets'])} buckets, "
-          f"{stats['host_syncs_per_token']:.3f} host syncs/token "
-          f"({stats['host_syncs']} syncs / {stats['decode_tokens']} decode tokens)")
+          f"{stats['host_syncs_per_token']:.3f} host syncs/token, "
+          f"{stats['active_slots_per_step']:.2f} active slots/engine step")
+    print(f"sessions: {stats['sessions_opened']} opened, "
+          f"{stats['session_turns']} turns, "
+          f"{stats['turn_prefix_hits']} admitted off the retained tail, "
+          f"{stats['stream_chunks']} stream chunks")
     if args.cache_mode == "paged":
         kind = ("shared pages" if "pages_total" in stats
                 else "restored state snapshots")
@@ -76,9 +109,10 @@ def main():
               f"({stats['prefix_hit_tokens']}/{stats['prompt_tokens']}), "
               f"{stats['radix_nodes']} radix nodes, {pool}")
 
-    # 2) the same engine as the agents' LLM backend (one workflow invocation)
+    # 2) the same server as the FAME agents' LLM backend (one workflow
+    #    invocation through the real runtime; JaxLLM keys a session per role)
     rt = FameRuntime(config=CONFIGS["M+C"], max_iterations=1)
-    backend = JaxLLM(engine, max_new_tokens=8,
+    backend = JaxLLM(server, max_new_tokens=8,
                      latency=rates_for_arch(args.arch),
                      temperature=args.temperature, top_k=args.top_k)
     for role in ("planner", "actor", "evaluator"):
@@ -89,7 +123,6 @@ def main():
     i_tok, o_tok = tr.llm_tokens()
     print(f"agent workflow on JaxLLM: status={res.statuses[0]} "
           f"llm_calls={tr.count('llm')} in_tok={i_tok} out_tok={o_tok}")
-    print(f"serving stats after agents: {backend.serving_stats()}")
     print("(untrained weights -> workflow outcome is expected to DNF; the "
           "point is the full tokenize->prefill->decode serving path under "
           "the agents)")

@@ -142,10 +142,16 @@ class ScriptedOracle(LLMBackend):
 class JaxLLM(LLMBackend):
     """FAME agents on the real serving engine's sync-free fast path.
 
+    ``engine`` is either an ``repro.serving.server.LLMServer`` (preferred:
+    each agent role gets its own server *session*, keyed by its system
+    prompt, so a role's growing conversation reuses its end-of-generation
+    state across turns and concurrent roles co-batch through handles) or a
+    legacy ``ServingEngine`` (the deprecated blocking path, kept for A/B).
     ``temperature`` / ``top_k`` ride through to the engine's on-device
     per-slot sampler; ``serving_stats`` exposes the engine's fast-path
-    counters (compiles, host syncs, decode tokens) so agent benchmarks can
-    report serving efficiency alongside workflow metrics.
+    counters (compiles, host syncs, decode tokens, session/turn reuse) so
+    agent benchmarks can report serving efficiency alongside workflow
+    metrics.
     """
 
     def __init__(self, engine, max_new_tokens: int = 48,
@@ -156,8 +162,38 @@ class JaxLLM(LLMBackend):
         self.max_new_tokens = max_new_tokens
         self.temperature = temperature
         self.top_k = top_k
+        self._sessions: Dict[str, Any] = {}     # system prompt -> Session
+
+    def _params(self):
+        from repro.serving.server import SamplingParams
+        return SamplingParams(max_new_tokens=self.max_new_tokens,
+                              temperature=self.temperature,
+                              top_k=self.top_k)
+
+    def _server(self):
+        from repro.serving.server import LLMServer
+        return self.engine if isinstance(self.engine, LLMServer) else None
+
+    def submit(self, system: str, context: str):
+        """Non-blocking submission (LLMServer only): returns a Handle so N
+        concurrent agent calls can co-batch before any result is drained.
+        If the role's session already has a turn in flight (two concurrent
+        workflows sharing one role prompt), the call falls back to a
+        sessionless submit — it still co-batches and radix-shares the
+        prefix, it just skips the session-tail reuse."""
+        session = self._sessions.get(system)
+        if session is None or session.closed:
+            session = self._server().open_session()
+            self._sessions[system] = session
+        if session.busy:
+            return self._server().submit(system + "\n" + context,
+                                         self._params())
+        return session.submit(system + "\n" + context, self._params())
 
     def _generate(self, system: str, context: str) -> str:
+        if self._server() is not None:
+            return self.submit(system, context).result()
+        # deprecated ServingEngine path (one test keeps it covered)
         return self.engine.generate(system + "\n" + context,
                                     max_new_tokens=self.max_new_tokens,
                                     temperature=self.temperature,

@@ -1,589 +1,49 @@
-"""Serving engine: slot-based continuous batching over a sync-free fast path.
+"""Deprecated serving façade — the engine now lives in two layers.
 
-The engine owns a fixed decode batch of ``num_slots`` sequences sharing one
-ring KV cache (per-slot cache rows). Requests queue up; free slots are
-prefilled and join the in-flight decode batch; finished slots are released to
-the next request — continuous batching, the vLLM/MaxText serving idiom.
+The 1200-line monolith this module used to hold was split:
 
-Fast-path structure (see benchmarks/serving_bench.py for the measurements):
+* **serving/scheduler.py** — the scheduler layer: request queue (FIFO within
+  priority classes), slot lifecycle, paged/radix/snapshot bookkeeping,
+  sessions, cancellation, stop sequences, per-request RNG, ``stats()``.
+* **serving/programs.py** — the jit-program layer: bucketed prefill, extend
+  continuations, the chunked decode loop, the fused speculative verify, the
+  snapshot splices.
 
-* **Bucketed prefill** — prompts are right-padded to a small set of length
-  buckets, so the prefill function compiles once per bucket instead of once
-  per distinct prompt length. The per-slot cache splice happens *inside* the
-  jit (``dynamic_update_slice`` at the slot index, donated shared cache), not
-  as a host-side tree-map copy.
-* **Chunked decode** — a jit'd ``lax.while_loop`` decodes up to
-  ``decode_chunk`` tokens per engine step with a per-slot done mask
-  (EOS / token budget / capacity), sampling on device with per-slot
-  temperature / top-k (``sampler.sample_batched``). The host syncs at most
-  once per chunk, not once per token.
-* **Aligned cache** — cache capacity is rounded up to the decode-attention
-  kernel block (``block_w``), so the Pallas kernel never re-pads the cache.
-* **Chunked prefill** — prompts longer than the largest bucket are split into
-  bucket-sized chunks: the first chunk takes the normal bucketed prefill, the
-  rest run ``model.extend`` (prefill continuation against the already-filled
-  cache). No more silent exact-length fallback past the last bucket; prompts
-  truncate only at the hard capacity window, and that truncation is counted
-  (``Request.truncated_tokens``, ``stats()["truncated_tokens"]``).
-* **Drafter-free speculative decoding** — ``EngineConfig(spec_len=N)``: a
-  per-slot n-gram lookup over the request's own context (serving/spec.py —
-  no draft model, pure host-side hashing) proposes up to N continuation
-  tokens per engine step; ONE jit'd verify forward (``model.verify``) scores
-  every draft position for every slot at once and ``sampler.accept_batched``
-  commits the accepted prefix plus a correction/bonus token on device.
-  Greedy slots accept by exact match (output bit-identical to
-  non-speculative decode); temperature slots use rejection-sampling
-  acceptance (marginals provably match non-speculative sampling). FAME's
-  copy-heavy outputs (tool results / log lines re-surfaced in answers)
-  accept most drafts, cutting forwards-per-token several-fold
-  (benchmarks/spec_bench.py). EVERY arch takes the batched path: linear
-  full-attention caches roll back for free (rejected K/V is position-masked
-  until overwritten — dense rows or paged block tables); recurrent / conv /
-  mLSTM / sLSTM / ring-KV blocks stage per-position states during the
-  verify forward and ``model.verify_commit`` gathers the state at each
-  row's accepted length inside the same jit (accept-length state rewind —
-  no per-slot replay forward). Slots whose acceptance rate drops below
-  ``spec_min_accept`` stop drafting; steps with no drafts anywhere fall
-  back to the chunked decode loop.
-* **Paged KV + radix prefix sharing** — ``EngineConfig(cache_mode="paged")``
-  swaps the dense per-slot cache rows for one pool of fixed-size KV pages
-  (serving/kvpool.py) with per-request block tables, indexed by a radix
-  token-trie (serving/radix.py). A request whose prompt shares a prefix with
-  any earlier request reuses the prefix's pages outright and only prefills
-  the suffix — prefill work and cache memory scale with *unique* tokens
-  across the batch, the property that makes N agents × one shared system
-  prompt sublinear (FAME's context-reuse result, PAPER.md §3.3). Decode
-  gathers K/V through the block table (``kernels/paged_decode_attention`` on
-  TPU, gather reference on CPU). ``cache_mode="dense"`` keeps the PR-1 path
-  for A/B (benchmarks/prefix_bench.py measures both). Admission is
-  radix-aware: queued requests sharing the just-admitted prompt's first
-  radix block move (stably) to the queue front so one engine step admits
-  the whole group while the shared pages are pinned and hot
-  (``stats()["grouped_admissions"]``).
-* **Per-prefix recurrent-state snapshots** — ``cache_mode="paged"`` on a
-  *stateful* arch (recurrent / conv / mLSTM / sLSTM / ring-KV; no shareable
-  pages, but O(1) decode state) keeps the dense per-slot cache rows and
-  shares prefixes through the same radix trie with a pooled snapshot arena
-  instead: after prefilling up to a radix-block boundary the engine splices
-  the slot's complete fixed-size state (recurrent h, conv window,
-  mLSTM/sLSTM state, ring KV + implicit write cursor) into one arena row
-  and hands it to the trie node. A later request that radix-matches the
-  prefix restores the nearest boundary snapshot into its slot and prefills
-  only the suffix — the exact prefix-reuse the paged path gives attention
-  archs, at O(1) storage per boundary (``stats()["snapshot_hits"]`` etc.;
-  benchmarks/prefix_bench.py measures it with ``--arch recurrentgemma-9b``).
-
-On CPU it runs reduced configs end-to-end (agents in examples/serve_agents.py
-talk to it); on the production mesh the same functions lower through
-launch/dryrun.py (prefill_32k / decode_32k / long_500k cells).
+New code should use the session-oriented frontend,
+``repro.serving.server.LLMServer`` (``open_session()`` / ``submit() ->
+Handle`` / ``handle.stream()`` / ``cancel()``), with per-request parameters
+in a ``SamplingParams`` — see docs/serving.md. ``ServingEngine`` remains as
+a thin deprecation shim so existing callers and the A/B benchmarks keep
+working: ``submit(prompt, **kwargs)`` forwards to
+``Scheduler.enqueue(prompt, SamplingParams(...))`` and warns.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import time
-from typing import List, Optional, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.models import Model
-from repro.serving import kvpool
-from repro.serving.radix import RadixTree
-from repro.serving.sampler import accept_batched, sample_batched
-from repro.serving.spec import NgramDrafter
-from repro.serving.tokenizer import ByteTokenizer
+from repro.serving.programs import auto_buckets as _auto_buckets  # noqa: F401
+from repro.serving.scheduler import (EngineConfig, Request,  # noqa: F401
+                                     SamplingParams, Scheduler)
 
 
-def _slot_extract(cache, slot):
-    """Single-row view of slot ``slot``: scan leaves are [L, B, ...], tail
-    leaves [B, ...] (mirrors ``_slot_splice``)."""
-    def _scan_get(full):
-        return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=1)
+class ServingEngine(Scheduler):
+    """Back-compat engine: the pre-redesign blocking API over the scheduler.
 
-    def _tail_get(full):
-        return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=0)
-
-    return {k: jax.tree.map(_scan_get if k == "scan" else _tail_get, cache[k])
-            for k in cache}
-
-
-def _slot_splice(cache, cache1, slot):
-    """Write a single-row cache pytree back into row ``slot``."""
-    def _scan_leaf(full, one):
-        return jax.lax.dynamic_update_slice(
-            full, one.astype(full.dtype),
-            (jnp.int32(0), slot) + (jnp.int32(0),) * (full.ndim - 2))
-
-    def _tail_leaf(full, one):
-        return jax.lax.dynamic_update_slice(
-            full, one.astype(full.dtype),
-            (slot,) + (jnp.int32(0),) * (full.ndim - 1))
-
-    return {k: jax.tree.map(_scan_leaf if k == "scan" else _tail_leaf,
-                            cache[k], cache1[k])
-            for k in cache}
-
-
-def _select_rows(new_cache, old_cache, keep):
-    """Per-row cache select: rows with ``keep`` take the new cache, the rest
-    keep the old one bit-exactly. Scan leaves are [L, B, ...], tail leaves
-    [B, ...] (the _slot_extract convention)."""
-    def _scan_sel(n, o):
-        return jnp.where(keep.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o)
-
-    def _tail_sel(n, o):
-        return jnp.where(keep.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
-
-    return {k: jax.tree.map(_scan_sel if k == "scan" else _tail_sel,
-                            new_cache[k], old_cache[k])
-            for k in new_cache}
-
-
-def _auto_buckets(capacity: int, lo: int = 32) -> Tuple[int, ...]:
-    """Power-of-two prompt-length buckets up to (and including) capacity."""
-    buckets = []
-    b = min(lo, capacity)
-    while b < capacity:
-        buckets.append(b)
-        b *= 2
-    buckets.append(capacity)
-    return tuple(buckets)
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    """Serving fast-path knobs.
-
-    prefill_buckets: explicit bucket lengths; None → auto powers-of-two;
-                     empty tuple → exact-length prefill (one compile per
-                     distinct prompt length — the pre-fast-path behaviour,
-                     kept for A/B benchmarking).
-    decode_chunk:    decode tokens per jit'd inner loop (1 → one host sync
-                     per token, the pre-fast-path behaviour). All-greedy
-                     batches additionally compile a sampler-free loop body
-                     (no per-step RNG / top-k sort).
-    block_w:         decode-attention KV block; cache capacity is rounded up
-                     to a multiple of it so the kernel never re-pads.
-    donate:          donate the shared cache to prefill/decode jits
-                     (None → auto: on everywhere except CPU, where XLA
-                     ignores donation and warns).
-    cache_mode:      "dense" (PR-1 per-slot cache rows) or "paged" (radix
-                     prefix sharing). On full-attention archs "paged" means
-                     one KV page pool + per-request block tables
-                     (kvpool.supports_paged); on stateful archs (recurrent /
-                     conv / xLSTM / ring-KV — kvpool.supports_snapshots) it
-                     keeps dense rows and shares prefixes through per-prefix
-                     recurrent-state snapshots instead.
-    page_size:       KV tokens per page in paged mode; capacity is rounded up
-                     to a multiple of it. Smaller pages share finer prefixes
-                     at more gather overhead. Snapshot mode reuses it as the
-                     radix block granularity.
-    num_pages:       device pages in the pool (None → auto: trash page +
-                     2 × num_slots × pages-per-request, leaving headroom for
-                     retained prefixes before LRU eviction kicks in).
-    num_snapshots:   snapshot-arena rows in snapshot mode (None → auto:
-                     ~num_slots × boundaries-per-request + headroom). Each
-                     row holds one complete per-sequence state, so memory is
-                     num_snapshots × state-size — size it to taste and let
-                     LRU eviction manage the rest.
-    snap_stride:     radix blocks between snapshot boundaries (1 = capture at
-                     every block, the finest prefix reuse; larger strides
-                     trade hit depth for fewer arena rows and fewer prefill
-                     chunk splits).
-    spec_len:        max draft tokens per speculative verify step (0 = off).
-                     A per-slot n-gram lookup drafter (serving/spec.py, no
-                     draft model) proposes continuations; one verify forward
-                     scores every draft position at once and an accept/
-                     rollback step commits the matched prefix. Greedy slots
-                     accept by exact match (outputs bit-identical to
-                     non-speculative decode); temperature slots use
-                     rejection-sampling acceptance (distribution-correct).
-    spec_ngram_min/max: suffix n-gram lengths the drafter indexes.
-    spec_min_accept: per-slot drafting turns off for the rest of a request
-                     once its acceptance rate drops below this (after
-                     spec_warmup drafted tokens) — unpredictable outputs
-                     then pay zero verify overhead.
-    spec_warmup:     drafted tokens per slot before adaptive disable engages.
+    Everything an existing caller touched (``slots``, ``stats()``,
+    ``run_until_drained()``, ``kvpool`` / ``radix`` / ``snaps``, ...) is
+    inherited unchanged from ``Scheduler``; only the kwargs-style
+    ``submit``/``generate`` entry points are deprecated.
     """
-    prefill_buckets: Optional[Tuple[int, ...]] = None
-    decode_chunk: int = 16
-    block_w: int = 256
-    donate: Optional[bool] = None
-    cache_mode: str = "dense"
-    page_size: int = 16
-    num_pages: Optional[int] = None
-    num_snapshots: Optional[int] = None
-    snap_stride: int = 1
-    spec_len: int = 0
-    spec_ngram_min: int = 2
-    spec_ngram_max: int = 4
-    spec_min_accept: float = 0.35
-    spec_warmup: int = 64
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: str
-    max_new_tokens: int = 64
-    temperature: float = 0.0
-    top_k: int = 0
-    # filled by the engine
-    prompt_tokens: int = 0
-    truncated_tokens: int = 0      # dropped at the hard capacity window
-    prefix_hit_tokens: int = 0     # paged: prompt tokens served from shared pages
-    output_text: str = ""
-    output_tokens: int = 0
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    latency_s: float = 0.0
-    admit_index: int = -1
-    _submit_t: float = 0.0
-    _ids: Optional[list] = None    # tokenized prompt, cached across admission
-                                   # retries (paged head-of-line waits)
-    _grouped: bool = False         # moved up the queue by radix-aware
-                                   # admission batching (paged mode)
-
-
-@dataclasses.dataclass
-class _Slot:
-    request: Optional[Request] = None
-    cache_len: int = 0
-    remaining: int = 0
-    generated: Optional[list] = None
-    # paged mode bookkeeping
-    token_ids: Optional[list] = None      # prompt ids (post-truncation)
-    pages_shared: Optional[list] = None   # radix-matched prefix pages (tree-owned)
-    pages_priv: Optional[list] = None     # this request's own pages
-    node: Optional[object] = None         # pinned radix node
-    # speculative decoding bookkeeping
-    drafter: Optional[NgramDrafter] = None
-    spec_on: bool = False                 # adaptive per-slot enable
-    spec_drafted: int = 0                 # draft tokens proposed for this slot
-    spec_accepted: int = 0                # ... of which verify accepted
-
-
-class ServingEngine:
-    def __init__(self, cfg, *, num_slots: int = 4, capacity: int = 512,
-                 params=None, seed: int = 0,
-                 engine_cfg: Optional[EngineConfig] = None):
-        self.engine_cfg = engine_cfg or EngineConfig()
-        if self.engine_cfg.decode_chunk < 1:
-            raise ValueError(
-                f"decode_chunk must be >= 1, got {self.engine_cfg.decode_chunk} "
-                "(a zero-length chunk makes no progress)")
-        mode = self.engine_cfg.cache_mode
-        if mode not in ("dense", "paged"):
-            raise ValueError(f"cache_mode must be 'dense' or 'paged', got {mode!r}")
-        # "paged" resolves per arch family: KV page pool for full-attention
-        # archs, per-prefix recurrent-state snapshots for stateful archs
-        self.paged = self.snapshots = False
-        if mode == "paged":
-            ok, why = kvpool.supports_paged(cfg)
-            if ok:
-                self.paged = True
-            else:
-                ok2, why2 = kvpool.supports_snapshots(cfg)
-                if not ok2:
-                    raise ValueError(
-                        f"cache_mode='paged' unsupported for {cfg.name}: "
-                        f"{why}; {why2}")
-                self.snapshots = True
-        if self.engine_cfg.spec_len < 0:
-            raise ValueError(
-                f"spec_len must be >= 0, got {self.engine_cfg.spec_len}")
-        self.spec = self.engine_cfg.spec_len > 0
-        if self.spec and cfg.modality != "text":
-            raise ValueError(
-                "speculative decoding needs token-id inputs; "
-                f"modality={cfg.modality!r} has no n-gram stream to draft "
-                "from")
-        # pure full-attention caches tolerate done-row decode writes (same
-        # position, same value — idempotent); every other cache family keeps
-        # real state that must be frozen for rows sitting a chunk out
-        self._freeze_done_rows = not kvpool.supports_paged(cfg)[0]
-        bw = max(1, self.engine_cfg.block_w)
-        if capacity > bw:
-            capacity = -(-capacity // bw) * bw      # align to kernel block
-        ps = self.engine_cfg.page_size
-        if self.paged or self.snapshots:
-            if ps < 1:
-                raise ValueError(f"page_size must be >= 1, got {ps}")
-        if self.paged:
-            capacity = -(-capacity // ps) * ps      # align to page size
-        self.cfg = dataclasses.replace(cfg, decode_block_w=bw)
-        self.model = Model(self.cfg)
-        self.tokenizer = ByteTokenizer(cfg.vocab_size)
-        self.num_slots = num_slots
-        self.capacity = capacity
-        buckets = self.engine_cfg.prefill_buckets
-        self.buckets: Tuple[int, ...] = (_auto_buckets(capacity)
-                                         if buckets is None else
-                                         tuple(sorted(buckets)))
-        key = jax.random.PRNGKey(seed)
-        self.params = params if params is not None else self.model.init(key)
-        if self.paged:
-            self._bt_width = capacity // ps
-            n_pages = self.engine_cfg.num_pages
-            if n_pages is None:
-                n_pages = 1 + 2 * num_slots * self._bt_width
-            # self.cache IS the page pool in paged mode: same pytree
-            # structure, batch axis re-purposed as the page axis
-            self.cache = kvpool.init_paged_cache(self.cfg, n_pages, ps)
-            self.kvpool = kvpool.PagePool(n_pages)
-            self.radix = RadixTree(ps)
-            self._bt_device = None      # cached decode block table (device)
-        else:
-            self.cache = self.model.init_cache(num_slots, capacity)
-            self.kvpool = None
-            self.radix = None
-        if self.snapshots:
-            # snapshot mode: dense per-slot rows + a radix trie whose nodes
-            # own rows of a pooled snapshot arena (the model's cache pytree
-            # with batch axis = snapshot slots)
-            self.radix = RadixTree(ps)
-            stride = max(1, self.engine_cfg.snap_stride)
-            n_snaps = self.engine_cfg.num_snapshots
-            if n_snaps is None:
-                n_snaps = 1 + num_slots * (-(-capacity // (ps * stride)) + 2)
-            self.snaps = kvpool.SnapshotArena(n_snaps)
-            self.snap_arena = self.model.init_cache(n_snaps, capacity)
-        else:
-            self.snaps = None
-            self.snap_arena = None
-        self.slots = [_Slot() for _ in range(num_slots)]
-        self._queue: "collections.deque[Request]" = collections.deque()
-        self._rng = jax.random.PRNGKey(seed + 1)
-        self._next_rid = 0
-        self._next_admit = 0
-
-        # perf counters (benchmarks/{serving,prefix}_bench.py read these)
-        self._prefill_shapes: set = set()        # 1 jit compile per entry
-        self._extend_shapes: set = set()         # ... for extend chunks
-        self._decode_syncs = 0                   # blocking pulls in decode
-        self._prefill_syncs = 0                  # blocking pulls at admission
-        self._decode_tokens = 0
-        self._decode_chunks = 0
-        self._extend_chunks = 0
-        self._truncated_tokens = 0               # dropped at capacity window
-        self._truncated_requests = 0
-        self._pad_tokens = 0                     # prefill bucket padding waste
-        self._prompt_tokens = 0                  # real (unpadded) prompt tokens
-        self._prefix_hit_tokens = 0              # paged: served from shared pages
-        self._draft_tokens = 0                   # spec: tokens proposed
-        self._accepted_tokens = 0                # spec: drafts verify accepted
-        self._verify_steps = 0                   # spec: verify forwards run
-        self._grouped_admissions = 0             # paged/snap: radix-grouped
-        self._snap_hits = 0                      # snap: admissions restored
-        self._snap_misses = 0                    # ... or prefilled from zero
-        self._snap_captures = 0                  # snapshots spliced to arena
-
-        donate = self.engine_cfg.donate
-        if donate is None:
-            donate = jax.default_backend() != "cpu"
-        dargs = (1,) if donate else ()
-        self._jit_prefill = jax.jit(self._prefill_fn, donate_argnums=dargs)
-        self._jit_decode_chunk = jax.jit(self._decode_chunk_fn,
-                                         donate_argnums=dargs)
-        self._jit_extend = jax.jit(self._extend_fn, donate_argnums=dargs,
-                                   static_argnames=("sample",))
-        self._jit_extend_paged = jax.jit(self._extend_paged_fn,
-                                         donate_argnums=dargs,
-                                         static_argnames=("sample",))
-        if self.snapshots:
-            d0 = (0,) if donate else ()
-            self._jit_snap_capture = jax.jit(self._snap_capture_fn,
-                                             donate_argnums=d0)
-            self._jit_snap_restore = jax.jit(self._snap_restore_fn,
-                                             donate_argnums=d0)
-        if self.spec:
-            # ONE jit per verify step for every arch: forward + accept +
-            # accept-length state rewind (model.verify_commit) fused
-            self._jit_verify = jax.jit(self._verify_fn, donate_argnums=dargs)
-
-    # ---- jit'd computations ------------------------------------------------
-    def _prefill_fn(self, params, cache, tokens, positions, slot, length, key,
-                    temperature, top_k):
-        """Prefill one (padded) prompt and splice it into the shared cache.
-
-        Everything — forward pass, per-slot cache splice, first-token sample —
-        happens in one jit, compiled once per bucket length.
-        """
-        cache1 = self.model.init_cache(1, self.capacity)
-        batch = {("frames" if self.cfg.modality == "audio_frames" else "tokens"): tokens,
-                 "positions": positions}
-        logits, cache1 = self.model.prefill(params, batch, cache1,
-                                            length=length, with_logits="last")
-        tok = self._sample_last(logits, length, key, temperature, top_k)
-        # splice the single-row cache into slot `slot` of the shared cache;
-        # scan caches are [L, B, ...] (batch dim 1), tail caches [B, ...]
-        return _slot_splice(cache, cache1, slot), tok
-
-    def _sample_last(self, logits, length, key, temperature, top_k):
-        """Sample one token from the logits at position ``length - 1``
-        (or from already-sliced ``with_logits="last"`` logits [B, 1, V])."""
-        if logits.shape[1] == 1:
-            last = logits[:, 0]                                      # [1, V]
-        else:
-            last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
-                                                keepdims=False)      # [1, V]
-        tok = sample_batched(last, key, temperature=temperature[None],
-                             top_k=top_k[None], vocab_limit=self.cfg.vocab_size)
-        return tok[0]
-
-    def _extend_fn(self, params, cache, tokens, positions, slot, start,
-                   length, key, temperature, top_k, *, sample: bool):
-        """Dense chunked-prefill continuation for one slot.
-
-        Extract the slot's cache row, run ``model.extend`` (the chunk attends
-        to the already-prefilled prefix + itself; recurrent state resumes),
-        splice the row back — all in one jit, compiled once per chunk shape.
-        ``sample=True`` (the prompt's final chunk) additionally unembeds and
-        samples at the last valid position; intermediate chunks skip the
-        unembed matmul entirely.
-        """
-        cache1 = _slot_extract(cache, slot)
-        tok_key = ("frames" if self.cfg.modality == "audio_frames" else "tokens")
-        batch = {tok_key: tokens, "positions": positions}
-        logits, cache1 = self.model.extend(
-            params, batch, cache1, start, length=length,
-            with_logits="last" if sample else False)
-        tok = (self._sample_last(logits, length, key, temperature, top_k)
-               if sample else jnp.int32(-1))
-        return _slot_splice(cache, cache1, slot), tok
-
-    def _extend_paged_fn(self, params, pool, tokens, positions, bt, start,
-                         length, key, temperature, top_k, *, sample: bool):
-        """Paged prefill: write the chunk's K/V into this request's pages and
-        attend to the full block-table view (shared prefix pages included —
-        the radix-matched prefix is never recomputed)."""
-        tok_key = ("frames" if self.cfg.modality == "audio_frames" else "tokens")
-        batch = {tok_key: tokens, "positions": positions}
-        logits, pool = self.model.extend(
-            params, batch, pool, start, length=length, block_tables=bt,
-            with_logits="last" if sample else False)
-        tok = (self._sample_last(logits, length, key, temperature, top_k)
-               if sample else jnp.int32(-1))
-        return pool, tok
-
-    def _decode_chunk_fn(self, params, cache, last_tok, cache_lens, remaining,
-                         done, temps, top_ks, key, block_tables=None):
-        """Decode up to ``decode_chunk`` tokens for every live slot on device.
-
-        Per-slot done mask (EOS / budget / capacity); finished or empty slots
-        keep running in the fixed batch but stop emitting and stop advancing
-        their cache row. Returns everything the host needs in one pull.
-        """
-        chunk = self.engine_cfg.decode_chunk
-        B = self.num_slots
-        eos = self.tokenizer.eos_id
-        tok_buf = jnp.zeros((chunk, B), jnp.int32)
-        emit_buf = jnp.zeros((chunk, B), bool)
-
-        def cond(st):
-            i = st[0]
-            return (i < chunk) & jnp.any(~st[5])
-
-        def body(st):
-            i, cache, last, clens, rem, done, key, tb, eb = st
-            if self.cfg.modality == "audio_frames":
-                # same frame-embedding stub the admission path applies
-                toks = jax.nn.one_hot(last[:, None] % self.cfg.d_model,
-                                      self.cfg.d_model,
-                                      dtype=jnp.dtype(self.cfg.dtype))
-                batch = {"frames": toks, "positions": clens[:, None]}
-            else:
-                batch = {"tokens": last[:, None], "positions": clens[:, None]}
-            logits, new_cache = self.model.decode_step(params, batch, cache,
-                                                       clens,
-                                                       block_tables=block_tables)
-            if self._freeze_done_rows:
-                # stateful archs: a done-masked row must not keep advancing
-                # its recurrent / conv / mLSTM / sLSTM state on a stale
-                # input — above all a spec-handled slot sitting this chunk
-                # out, which continues decoding next step. Full-attention
-                # rows skip this (their stale write is position-masked and
-                # idempotent; their caches are also the big ones).
-                cache = _select_rows(new_cache, cache, ~done)
-            else:
-                cache = new_cache
-            if temps is None:                   # statically greedy batch:
-                sub = key                       # no RNG / sort in the loop
-            else:
-                key, sub = jax.random.split(key)
-            nxt = sample_batched(logits[:, 0], sub, temperature=temps,
-                                 top_k=top_ks, vocab_limit=self.cfg.vocab_size)
-            emit = ~done
-            last = jnp.where(emit, nxt, last)
-            clens = clens + emit.astype(jnp.int32)
-            rem = rem - emit.astype(jnp.int32)
-            done = done | (emit & ((rem <= 0) | (nxt == eos)
-                                   | (clens >= self.capacity - 1)))
-            tb = tb.at[i].set(jnp.where(emit, nxt, 0))
-            eb = eb.at[i].set(emit)
-            return (i + 1, cache, last, clens, rem, done, key, tb, eb)
-
-        st = (jnp.int32(0), cache, last_tok, cache_lens, remaining, done,
-              key, tok_buf, emit_buf)
-        _, cache, last_tok, cache_lens, remaining, done, _, tok_buf, emit_buf = \
-            jax.lax.while_loop(cond, body, st)
-        return cache, tok_buf, emit_buf, cache_lens, remaining, done
-
-    # ---- speculative decode (drafter-free): jit'd verify + accept + rewind -
-    def _verify_fn(self, params, cache, tokens, clens, lens, temps, top_ks,
-                   key, block_tables=None):
-        """One batched speculative verify step for every slot — any arch.
-
-        tokens [B, S]: ``[last, d_1 .. d_k, pad]`` per row (S = spec_len+1),
-        lens [B] = k+1 valid inputs (0 for rows sitting this verify out —
-        empty, done, or undrafted slots: no writes, no commits; undrafted
-        slots take the chunked decode loop this step instead). One forward
-        scores all draft positions (staging per-position states for stateful
-        blocks); accept_batched picks the matched prefix + a correction/
-        bonus token per drafted row; ``model.verify_commit`` then rewinds
-        every stateful block to its row's accepted length with gathers /
-        ring splices — all inside this one jit, no per-slot replay.
-        """
-        positions = clens[:, None] + jnp.arange(tokens.shape[1],
-                                                dtype=jnp.int32)[None, :]
-        batch = {"tokens": tokens, "positions": positions}
-        logits, staged = self.model.verify(params, batch, cache, clens,
-                                           lens=lens,
-                                           block_tables=block_tables)
-        out_tok, out_len = accept_batched(
-            logits, tokens, jnp.maximum(lens - 1, 0), key,
-            temperature=temps, top_k=top_ks,
-            vocab_limit=self.cfg.vocab_size, use_kernel=self.cfg.use_pallas)
-        cache = self.model.verify_commit(staged, clens, out_len, lens)
-        return cache, out_tok, out_len
-
-    # ---- per-prefix snapshot splices (snapshot mode) -----------------------
-    def _snap_capture_fn(self, arena, cache, sid, slot):
-        """Copy slot ``slot``'s complete state row into arena row ``sid``."""
-        return _slot_splice(arena, _slot_extract(cache, slot), sid)
-
-    def _snap_restore_fn(self, cache, arena, sid, slot):
-        """Restore arena row ``sid`` into slot ``slot`` — equivalent to
-        having prefilled the snapshot's prefix into that slot."""
-        return _slot_splice(cache, _slot_extract(arena, sid), slot)
-
-    # ---- public API -----------------------------------------------------------
     def submit(self, prompt: str, *, max_new_tokens: int = 64,
                temperature: float = 0.0, top_k: int = 0) -> Request:
-        if max_new_tokens >= self.capacity - 1:
-            raise ValueError(
-                f"max_new_tokens={max_new_tokens} leaves no room for the "
-                f"prompt in a capacity-{self.capacity} cache "
-                f"(need max_new_tokens <= capacity - 2)")
-        if max_new_tokens < 1:
-            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
-        self._next_rid += 1
-        req = Request(self._next_rid, prompt, max_new_tokens, temperature,
-                      top_k)
-        req._submit_t = time.perf_counter()
-        self._queue.append(req)
-        return req
+        warnings.warn(
+            "ServingEngine.submit(prompt, **kwargs) is deprecated; use "
+            "repro.serving.server.LLMServer with SamplingParams",
+            DeprecationWarning, stacklevel=2)
+        return self.enqueue(prompt, SamplingParams(
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            top_k=top_k))
 
     def generate(self, prompt: str, *, max_new_tokens: int = 64,
                  temperature: float = 0.0, top_k: int = 0) -> str:
@@ -591,611 +51,3 @@ class ServingEngine:
                           temperature=temperature, top_k=top_k)
         self.run_until_drained()
         return req.output_text
-
-    def stats(self) -> dict:
-        toks = max(self._decode_tokens, 1)
-        out = {
-            "cache_mode": self.engine_cfg.cache_mode,
-            "prefill_compiles": len(self._prefill_shapes),
-            "extend_compiles": len(self._extend_shapes),
-            "prefill_buckets": list(self.buckets),
-            "decode_chunk": self.engine_cfg.decode_chunk,
-            "decode_tokens": self._decode_tokens,
-            "decode_chunks": self._decode_chunks,
-            "extend_chunks": self._extend_chunks,
-            "host_syncs": self._decode_syncs,
-            "host_syncs_per_token": self._decode_syncs / toks,
-            # admission also pulls the first sampled token (once per request,
-            # not per token) — reported separately so the decode-path sync
-            # rate above stays honest
-            "prefill_syncs": self._prefill_syncs,
-            # prompt accounting: hard-window truncation (the seed engine
-            # dropped these silently) and bucket padding waste (compute spent
-            # on pad rows — the knob for tuning prefill_buckets from bench
-            # JSON)
-            "truncated_requests": self._truncated_requests,
-            "truncated_tokens": self._truncated_tokens,
-            "prompt_tokens": self._prompt_tokens,
-            "prefill_pad_tokens": self._pad_tokens,
-            "prefill_pad_frac": self._pad_tokens /
-                max(self._pad_tokens + self._prompt_tokens
-                    - self._prefix_hit_tokens, 1),
-            # speculative decode (all zero when spec_len == 0): drafted vs
-            # verify-accepted tokens, and how many verify forwards ran —
-            # acceptance_rate is the knob for tuning spec_len / the n-gram
-            # range from bench JSON (benchmarks/spec_bench.py)
-            "spec_len": self.engine_cfg.spec_len,
-            "draft_tokens": self._draft_tokens,
-            "accepted_tokens": self._accepted_tokens,
-            "acceptance_rate": self._accepted_tokens /
-                max(self._draft_tokens, 1),
-            "verify_steps": self._verify_steps,
-        }
-        if self.paged or self.snapshots:
-            out.update({
-                "page_size": self.engine_cfg.page_size,
-                "radix_nodes": self.radix.num_nodes,
-                # the headline: prompt tokens served straight from shared
-                # pages / restored state snapshots instead of re-prefilled
-                "prefix_hit_tokens": self._prefix_hit_tokens,
-                "prefix_hit_rate": self._prefix_hit_tokens /
-                    max(self._prompt_tokens, 1),
-                # queued requests admitted in the same engine step as an
-                # earlier request sharing their first radix block (the
-                # shared pages/snapshots are matched while still pinned/hot)
-                "grouped_admissions": self._grouped_admissions,
-            })
-        if self.paged:
-            out.update({
-                "pages_total": self.kvpool.num_pages,
-                "pages_free": self.kvpool.num_free,
-                "pages_peak_in_use": self.kvpool.peak_in_use,
-                "radix_evicted_pages": self.radix.evicted_pages,
-            })
-        if self.snapshots:
-            out.update({
-                # per-prefix recurrent-state snapshot arena: hits restore a
-                # boundary state instead of re-prefilling; misses prefill
-                # from scratch; evictions are LRU trie leaves reclaimed when
-                # the arena fills (tune num_snapshots / snap_stride from
-                # these)
-                "snapshots_total": self.snaps.num_snaps,
-                "snapshots_free": self.snaps.num_free,
-                "snapshots_peak_in_use": self.snaps.peak_in_use,
-                "snapshot_hits": self._snap_hits,
-                "snapshot_misses": self._snap_misses,
-                "snapshot_captures": self._snap_captures,
-                "snapshot_evictions": self.radix.evicted_snaps,
-            })
-        return out
-
-    # ---- engine loop --------------------------------------------------------
-    def _bucket_for(self, n: int) -> int:
-        for b in self.buckets:
-            if n <= b:
-                return b
-        return n                        # exact-length (legacy) mode
-
-    def _chunk_plan(self, n: int, start: int) -> List[Tuple[int, int, int]]:
-        """Split ``n`` prompt tokens beginning at position ``start`` into
-        prefill chunks: (offset, real_len, padded_len) triples. All chunks
-        but the last are exactly the largest bucket; the last is bucketed
-        (and clamped so the padded write never overruns capacity)."""
-        mb = max(self.buckets) if self.buckets else n
-        plan = []
-        off = 0
-        while off < n:
-            rest = n - off
-            if rest > mb:
-                plan.append((off, mb, mb))
-            else:
-                padded = min(self._bucket_for(rest),
-                             self.capacity - (start + off))
-                plan.append((off, rest, padded))
-            off += plan[-1][1]
-        return plan
-
-    def _chunk_batch(self, ids: List[int], start: int, padded: int):
-        """Device token/position arrays for one right-padded prefill chunk."""
-        padded_ids = ids + [self.tokenizer.pad_id] * (padded - len(ids))
-        tokens = jnp.asarray([padded_ids], jnp.int32)
-        positions = start + jnp.arange(padded, dtype=jnp.int32)[None, :]
-        if self.cfg.modality == "audio_frames":
-            # modality stub: frame embeddings stand in for token ids
-            tokens = jax.nn.one_hot(tokens % self.cfg.d_model, self.cfg.d_model,
-                                    dtype=jnp.dtype(self.cfg.dtype))
-        return tokens, positions
-
-    def _encode_prompt(self, req: Request) -> List[int]:
-        """Tokenize + clamp to the capacity window, counting what was cut
-        (the seed engine dropped tokens here with no trace at all)."""
-        window = self.capacity - req.max_new_tokens - 1   # >= 1 (submit guard)
-        if req._ids is None:
-            req._ids = self.tokenizer.encode(req.prompt)
-        full = req._ids
-        ids = full[-window:]
-        req.truncated_tokens = len(full) - len(ids)
-        if req.truncated_tokens:
-            self._truncated_tokens += req.truncated_tokens
-            self._truncated_requests += 1
-        req.prompt_tokens = len(ids)
-        self._prompt_tokens += len(ids)
-        return ids
-
-    def _prefill_span(self, si: int, req: Request, ids: List[int],
-                      start: int, end: int, *, sample: bool):
-        """Prefill ``ids[start:end]`` into slot ``si`` in bucketed chunks.
-
-        ``start == 0`` opens with the PR-1 bucketed prefill (fresh cache
-        row — it always unembeds one position and samples; a non-final span
-        discards that token); every other chunk is an ``extend``
-        continuation against the already-filled row (restored snapshot
-        included) that unembeds + samples only when it is the last chunk
-        and ``sample``. Returns the last chunk's sampled token.
-        """
-        plan = self._chunk_plan(end - start, start)
-        tok = None
-        for ci, (off, real, padded) in enumerate(plan):
-            o = start + off
-            tokens, positions = self._chunk_batch(ids[o:o + real], o, padded)
-            self._rng, k = jax.random.split(self._rng)
-            self._pad_tokens += padded - real
-            last = ci == len(plan) - 1
-            if o == 0:
-                self._prefill_shapes.add((padded, self.cfg.modality))
-                self.cache, t = self._jit_prefill(
-                    self.params, self.cache, tokens, positions,
-                    jnp.int32(si), jnp.int32(real), k,
-                    jnp.float32(req.temperature), jnp.int32(req.top_k))
-            else:
-                self._extend_shapes.add((padded, self.cfg.modality))
-                self._extend_chunks += 1
-                self.cache, t = self._jit_extend(
-                    self.params, self.cache, tokens, positions,
-                    jnp.int32(si), jnp.int32(o), jnp.int32(real), k,
-                    jnp.float32(req.temperature), jnp.int32(req.top_k),
-                    sample=sample and last)
-            if last:
-                tok = t
-        return tok
-
-    def _admit_dense(self, si: int, slot: _Slot, req: Request):
-        ids = self._encode_prompt(req)
-        first = self._prefill_span(si, req, ids, 0, len(ids), sample=True)
-        slot.request = req
-        slot.cache_len = len(ids)
-        slot.remaining = req.max_new_tokens - 1
-        slot.generated = [int(first)]                     # one host sync
-        self._arm_spec(slot, ids)
-        self._prefill_syncs += 1
-        return True
-
-    def _admit_paged(self, si: int, slot: _Slot, req: Request):
-        """Paged admission: radix-match the prompt, reserve pages, prefill
-        only the un-matched suffix. Returns False (request stays queued) when
-        the pool can't supply pages even after LRU eviction."""
-        ids = self._encode_prompt(req)
-        ps = self.engine_cfg.page_size
-        # always recompute at least the last prompt token (its logits seed
-        # the first sampled token), so cap the usable match one token short
-        shared, node = self.radix.match(ids[:len(ids) - 1])
-        prefix_len = len(shared) * ps
-        total_pages = -(-min(len(ids) + req.max_new_tokens + 1,
-                             self.capacity) // ps)
-        priv = self.kvpool.alloc(total_pages - len(shared))
-        if priv is None:
-            freed = self.radix.evict(total_pages - len(shared)
-                                     - self.kvpool.num_free)
-            self.kvpool.free(freed)
-            priv = self.kvpool.alloc(total_pages - len(shared))
-        if priv is None:
-            self.radix.release(node)
-            # un-count this attempt; the request stays at the queue head
-            self._prompt_tokens -= len(ids)
-            if req.truncated_tokens:
-                self._truncated_tokens -= req.truncated_tokens
-                self._truncated_requests -= 1
-            return False
-        req.prefix_hit_tokens = prefix_len
-        self._prefix_hit_tokens += prefix_len
-        bt = kvpool.block_table_array([shared + priv], self._bt_width)
-        first = None
-        plan = self._chunk_plan(len(ids) - prefix_len, prefix_len)
-        for ci, (off, real, padded) in enumerate(plan):
-            start = prefix_len + off
-            tokens, positions = self._chunk_batch(
-                ids[start:start + real], start, padded)
-            self._rng, k = jax.random.split(self._rng)
-            self._pad_tokens += padded - real
-            self._extend_shapes.add((padded, self.cfg.modality))
-            self._extend_chunks += 1
-            self.cache, tok = self._jit_extend_paged(
-                self.params, self.cache, tokens, positions, bt,
-                jnp.int32(start), jnp.int32(real), k,
-                jnp.float32(req.temperature), jnp.int32(req.top_k),
-                sample=ci == len(plan) - 1)
-            if ci == len(plan) - 1:
-                first = tok
-        slot.request = req
-        slot.cache_len = len(ids)
-        slot.remaining = req.max_new_tokens - 1
-        slot.generated = [int(first)]                     # one host sync
-        slot.token_ids = ids
-        slot.pages_shared = shared
-        slot.pages_priv = priv
-        slot.node = node
-        self._arm_spec(slot, ids)
-        self._bt_device = None          # slot membership changed
-        self._prefill_syncs += 1
-        self._group_queue(ids)
-        return True
-
-    def _capture_snapshot(self, si: int) -> int:
-        """Splice slot ``si``'s current state into a fresh arena row.
-        Returns the slot id, or -1 when the arena stays full even after LRU
-        trie eviction (every row backs a pinned path) — the capture is then
-        skipped; correctness is untouched, only future hit depth."""
-        sid = self.snaps.alloc()
-        if sid is None:
-            self.snaps.free(self.radix.evict_snaps(1))
-            sid = self.snaps.alloc()
-        if sid is None:
-            return -1
-        self.snap_arena = self._jit_snap_capture(self.snap_arena, self.cache,
-                                                 jnp.int32(sid),
-                                                 jnp.int32(si))
-        self._snap_captures += 1
-        return sid
-
-    def _admit_snap(self, si: int, slot: _Slot, req: Request):
-        """Snapshot-mode admission (stateful archs under cache_mode="paged"):
-        radix-match the prompt, restore the nearest per-prefix state
-        snapshot into the slot, and prefill only the suffix — capturing new
-        snapshots at every ``snap_stride``-block boundary along the way and
-        adopting them into the trie immediately, so the rest of THIS engine
-        step's grouped admissions already reuse them. Never fails: snapshots
-        take no pages, and a full arena only skips captures."""
-        ids = self._encode_prompt(req)
-        ps = self.engine_cfg.page_size
-        # always recompute at least the last prompt token (its logits seed
-        # the first sampled token), so cap the usable match one token short
-        _, node = self.radix.match(ids[:len(ids) - 1])
-        sid, sblocks = self.radix.nearest_snapshot(node)
-        restore = sblocks * ps
-        if sid >= 0:
-            self.cache = self._jit_snap_restore(self.cache, self.snap_arena,
-                                                jnp.int32(sid), jnp.int32(si))
-            self._snap_hits += 1
-        else:
-            self._snap_misses += 1
-        req.prefix_hit_tokens = restore
-        self._prefix_hit_tokens += restore
-        stride = ps * max(1, self.engine_cfg.snap_stride)
-        bounds = set(range((restore // stride + 1) * stride,
-                           len(ids) + 1, stride))
-        new_snaps = {}
-        pos, first = restore, None
-        for end in sorted(bounds | {len(ids)}):
-            first = self._prefill_span(si, req, ids, pos, end,
-                                       sample=end == len(ids))
-            if end in bounds:
-                s = self._capture_snapshot(si)
-                if s >= 0:
-                    new_snaps[end // ps] = s
-            pos = end
-        if new_snaps:
-            hi = max(new_snaps) * ps
-            self.snaps.free(self.radix.insert_snaps(ids[:hi], new_snaps))
-        slot.request = req
-        slot.cache_len = len(ids)
-        slot.remaining = req.max_new_tokens - 1
-        slot.generated = [int(first)]                     # one host sync
-        slot.token_ids = ids
-        slot.node = node
-        self._arm_spec(slot, ids)
-        self._prefill_syncs += 1
-        self._group_queue(ids)
-        return True
-
-    def _arm_spec(self, slot: _Slot, ids: List[int]):
-        """Index the request's context for the n-gram drafter (prompt + the
-        first sampled token; decode/verify commits extend it)."""
-        if not self.spec:
-            return
-        slot.drafter = NgramDrafter(ids + slot.generated,
-                                    n_min=self.engine_cfg.spec_ngram_min,
-                                    n_max=self.engine_cfg.spec_ngram_max)
-        slot.spec_on = True
-
-    def _group_queue(self, ids: List[int]):
-        """Radix-aware admission batching (paged): stable-move queued
-        requests whose (truncated) prompt shares the just-admitted prompt's
-        first radix block to the queue front, so the remaining free slots of
-        THIS engine step admit them while the shared prefix pages are pinned
-        and hot — N agents sharing a system prompt prefill it once and join
-        the same decode batch. FIFO order survives within the group and the
-        remainder."""
-        ps = self.engine_cfg.page_size
-        # queue[0] is the request being admitted right now — skip it
-        if len(ids) < ps or len(self._queue) < 2:
-            return
-        head = tuple(ids[:ps])
-        grouped, rest = [], []
-        for r in list(self._queue)[1:]:
-            if r._ids is None:
-                r._ids = self.tokenizer.encode(r.prompt)
-            rids = r._ids[-(self.capacity - r.max_new_tokens - 1):]
-            if len(rids) >= ps and tuple(rids[:ps]) == head:
-                r._grouped = True
-                grouped.append(r)
-            else:
-                rest.append(r)
-        if grouped:
-            self._queue = collections.deque(
-                [self._queue[0]] + grouped + rest)
-
-    def _admit(self):
-        """Prefill queued requests into free slots (continuous batching).
-
-        Paged mode admits FIFO: if the pool can't cover the head request the
-        whole admission round stops (no smaller request jumps the line), and
-        the head retries next step once decode frees pages.
-        """
-        for si, slot in enumerate(self.slots):
-            if slot.request is not None or not self._queue:
-                continue
-            req = self._queue[0]
-            t0 = time.perf_counter()
-            admit = (self._admit_paged if self.paged else
-                     self._admit_snap if self.snapshots else
-                     self._admit_dense)
-            admitted = admit(si, slot, req)
-            if not admitted:
-                if not self._active():
-                    raise RuntimeError(
-                        f"paged KV pool too small: request rid={req.rid} "
-                        f"needs more pages than the pool can ever free "
-                        f"(num_pages={self.kvpool.num_pages}, "
-                        f"page_size={self.engine_cfg.page_size})")
-                break
-            self._queue.popleft()
-            if req._grouped:
-                self._grouped_admissions += 1
-                req._grouped = False
-            req.admit_index = self._next_admit
-            self._next_admit += 1
-            req.prefill_s += time.perf_counter() - t0
-        # grouping credit is same-step only: a sharer still queued when the
-        # round ends admits later on its own (the pinned pages may be gone)
-        for r in self._queue:
-            r._grouped = False
-
-    def _active(self):
-        return [i for i, s in enumerate(self.slots) if s.request is not None]
-
-    def _finalize(self, si: int):
-        slot = self.slots[si]
-        req = slot.request
-        req.output_tokens = len(slot.generated)
-        req.output_text = self.tokenizer.decode(slot.generated)
-        req.latency_s = time.perf_counter() - req._submit_t
-        if self.paged:
-            # donate the finished sequence's complete pages to the radix tree
-            # (prompt + generated tokens: the next agent turn's prompt embeds
-            # this whole conversation, so it will match deep), free the rest
-            all_tokens = slot.token_ids + slot.generated
-            kv_cover = slot.cache_len          # positions actually written
-            ps = self.engine_cfg.page_size
-            n_complete = min(kv_cover, len(all_tokens)) // ps
-            bt_pages = slot.pages_shared + slot.pages_priv
-            rejected = self.radix.insert(all_tokens[:n_complete * ps],
-                                         bt_pages[:n_complete])
-            self.kvpool.free(rejected + bt_pages[n_complete:])
-            self.radix.release(slot.node)
-            self._bt_device = None      # slot membership changed
-        elif self.snapshots:
-            # snapshots were adopted into the trie at admission (and the
-            # end-of-generation state is not block-aligned, so there is
-            # nothing further to donate) — just unpin the matched node
-            self.radix.release(slot.node)
-        self.slots[si] = _Slot()
-
-    # ---- speculative decode pass -------------------------------------------
-    def _spec_pass(self, active) -> set:
-        """One speculative verify pass, interleaved with the chunked-decode
-        loop: slots whose drafter has a proposal verify it this step; the
-        returned set sits out the decode chunk. Falls back to plain chunked
-        decode (empty set) when no slot has a draft, so non-copyable
-        workloads pay nothing but the host-side n-gram lookups."""
-        eos = self.tokenizer.eos_id
-        live = []
-        for i in active:
-            s = self.slots[i]
-            # same conditions the decode loop's entry done-mask would catch
-            if (s.remaining <= 0 or s.cache_len >= self.capacity - 1
-                    or s.generated[-1] == eos):
-                self._finalize(i)
-                continue
-            live.append(i)
-        if not live:
-            return set(active)
-        drafts = {}
-        for i in live:
-            s = self.slots[i]
-            d = []
-            if s.spec_on:
-                # the +1 correction/bonus token must fit the budget and the
-                # capacity window, and draft writes must stay in bounds
-                cap = min(self.engine_cfg.spec_len, s.remaining - 1,
-                          self.capacity - 2 - s.cache_len)
-                if cap > 0:
-                    d = s.drafter.draft(cap)
-            drafts[i] = d
-        drafted = [i for i in live if drafts[i]]
-        if not drafted:
-            return set()
-        # only drafted slots verify; the rest keep the chunked decode loop
-        # (a disabled or draftless slot must not degrade to one-token steps)
-        self._spec_step_batched(drafted, drafts)
-        return set(drafted)
-
-    def _spec_step_batched(self, live, drafts):
-        """ONE jit'd verify forward scores every drafted slot's proposal at
-        once, for every arch (rows of undrafted slots carry lens=0 — no
-        reads, no writes, no commits). Rollback: linear full-attention K/V
-        is masked by cache position until overwritten; recurrent / conv /
-        xLSTM / ring-KV state rewinds to each row's accepted length inside
-        the same jit (``model.verify_commit``)."""
-        t0 = time.perf_counter()
-        S = self.engine_cfg.spec_len + 1
-        tok_rows = [[0] * S for _ in range(self.num_slots)]
-        lens = [0] * self.num_slots
-        for i in live:
-            s = self.slots[i]
-            row = [s.generated[-1]] + drafts[i]
-            lens[i] = len(row)
-            tok_rows[i][:len(row)] = row
-        tokens = jnp.asarray(tok_rows, jnp.int32)
-        lens_a = jnp.asarray(lens, jnp.int32)
-        clens = jnp.asarray([s.cache_len for s in self.slots], jnp.int32)
-        # the same greedy/temps/top-k static specialization as the decode loop
-        sampling = any(self.slots[i].request.temperature > 0.0 for i in live)
-        temps = (jnp.asarray([s.request.temperature if s.request else 0.0
-                              for s in self.slots], jnp.float32)
-                 if sampling else None)
-        top_ks = (jnp.asarray([s.request.top_k if s.request else 0
-                               for s in self.slots], jnp.int32)
-                  if sampling and any(self.slots[i].request.top_k > 0
-                                      for i in live)
-                  else None)
-        self._rng, k = jax.random.split(self._rng)
-        bt = None
-        if self.paged:
-            if self._bt_device is None:
-                self._bt_device = kvpool.block_table_array(
-                    [(s.pages_shared + s.pages_priv) if s.request else []
-                     for s in self.slots], self._bt_width)
-            bt = self._bt_device
-        self.cache, out_tok, out_len = self._jit_verify(
-            self.params, self.cache, tokens, clens, lens_a, temps, top_ks,
-            k, bt)
-        # the ONE host sync of the verify step
-        out_tok, out_len = jax.device_get((out_tok, out_len))
-        self._decode_syncs += 1
-        self._verify_steps += 1
-        dt = time.perf_counter() - t0
-        for i in live:
-            self._commit_spec(i, drafts[i], out_tok[i], int(out_len[i]),
-                              dt / len(live))
-
-    def _commit_spec(self, si, draft, out_row, n, dt):
-        """Commit one slot's verify outcome: n = accepted drafts + 1
-        correction/bonus token, truncated at the first EOS."""
-        slot = self.slots[si]
-        eos = self.tokenizer.eos_id
-        emitted = [int(t) for t in out_row[:n]]
-        for j, t in enumerate(emitted):
-            if t == eos:
-                emitted = emitted[:j + 1]
-                break
-        slot.generated.extend(emitted)
-        slot.drafter.extend(emitted)
-        slot.cache_len += len(emitted)
-        slot.remaining -= len(emitted)
-        slot.spec_drafted += len(draft)
-        slot.spec_accepted += n - 1
-        self._draft_tokens += len(draft)
-        self._accepted_tokens += n - 1
-        self._decode_tokens += len(emitted)
-        slot.request.decode_s += dt
-        ecfg = self.engine_cfg
-        if (slot.spec_on and slot.spec_drafted >= ecfg.spec_warmup
-                and slot.spec_accepted <
-                ecfg.spec_min_accept * slot.spec_drafted):
-            slot.spec_on = False        # this request isn't n-gram-predictable
-        if (slot.remaining <= 0 or slot.generated[-1] == eos
-                or slot.cache_len >= self.capacity - 1):
-            self._finalize(si)
-
-    def step(self):
-        """One engine iteration: admit, then one speculative verify pass for
-        slots with drafts (when spec is on) and/or one chunked decode for
-        the rest."""
-        self._admit()
-        active = self._active()
-        if not active:
-            return False
-        handled = self._spec_pass(active) if self.spec else set()
-        rest = [i for i in self._active() if i not in handled]
-        if not rest:
-            return True
-        t0 = time.perf_counter()
-        last = jnp.asarray([s.generated[-1] if s.request else 0
-                            for s in self.slots], jnp.int32)
-        clens = jnp.asarray([s.cache_len for s in self.slots], jnp.int32)
-        rem = jnp.asarray([s.remaining for s in self.slots], jnp.int32)
-        # spec-handled slots sit this chunk out via the done mask (they
-        # already advanced up to spec_len+1 tokens this step)
-        done = jnp.asarray([i in handled or s.request is None
-                            or s.remaining <= 0
-                            or s.cache_len >= self.capacity - 1
-                            or s.generated[-1] == self.tokenizer.eos_id
-                            for i, s in enumerate(self.slots)], bool)
-        # static specialization: an all-greedy batch (the common agent case)
-        # compiles a loop body with no RNG split / categorical / top-k sort —
-        # jit re-specializes on the None-vs-array structure, so at most three
-        # decode variants ever compile (greedy / temps / temps+top-k)
-        sampling = any(s.request.temperature > 0.0
-                       for s in self.slots if s.request)
-        temps = (jnp.asarray([s.request.temperature if s.request else 0.0
-                              for s in self.slots], jnp.float32)
-                 if sampling else None)
-        top_ks = (jnp.asarray([s.request.top_k if s.request else 0
-                               for s in self.slots], jnp.int32)
-                  if sampling and any(s.request.top_k > 0
-                                      for s in self.slots if s.request)
-                  else None)
-        self._rng, k = jax.random.split(self._rng)
-        # paged: the chunk's writes route through per-slot block tables
-        # (admission reserved pages for the whole token budget, so the table
-        # only changes when slot membership does — cached on device between
-        # chunks); empty/done slots point at the trash page. jit
-        # re-specializes on None-vs-array, like temps above.
-        bt = None
-        if self.paged:
-            if self._bt_device is None:
-                self._bt_device = kvpool.block_table_array(
-                    [(s.pages_shared + s.pages_priv) if s.request else []
-                     for s in self.slots], self._bt_width)
-            bt = self._bt_device
-
-        self.cache, tok_buf, emit_buf, clens, rem, done = \
-            self._jit_decode_chunk(self.params, self.cache, last, clens, rem,
-                                   done, temps, top_ks, k, bt)
-        # the ONE host sync of the chunk: pull tokens + masks + slot state
-        tok_buf, emit_buf, clens_h, rem_h, done_h = jax.device_get(
-            (tok_buf, emit_buf, clens, rem, done))
-        self._decode_syncs += 1
-        self._decode_chunks += 1
-        dt = time.perf_counter() - t0
-
-        emitted = 0
-        for i in rest:
-            slot = self.slots[i]
-            new = tok_buf[:, i][emit_buf[:, i]]
-            slot.generated.extend(int(t) for t in new)
-            if slot.drafter is not None and new.size:
-                slot.drafter.extend([int(t) for t in new])
-            emitted += int(new.size)
-            slot.cache_len = int(clens_h[i])
-            slot.remaining = int(rem_h[i])
-            slot.request.decode_s += dt / max(len(rest), 1)
-        self._decode_tokens += emitted
-        for i in rest:
-            if bool(done_h[i]):
-                self._finalize(i)
-        return True
-
-    def run_until_drained(self):
-        while self.step() or self._queue:
-            pass

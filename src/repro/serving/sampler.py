@@ -52,6 +52,11 @@ def _top_k_filter(scaled, k):
 def sample_batched(logits, key, *, temperature, top_k=None, vocab_limit: int = 0):
     """Per-row sampling with traced parameters. logits [B, V] -> ids [B].
 
+    key:         a single PRNG key shared by the batch, or per-row keys
+                 [B, 2] — then row b samples with its own key (the serving
+                 engine's per-request RNG chains: a request's draws depend
+                 only on its own key and token index, never on batch
+                 composition — see SamplingParams.seed).
     temperature: [B] f32 (<= 0 means greedy for that row), or None for a
                  statically greedy batch — no RNG / sort ops are traced at
                  all, which matters inside the engine's per-token decode loop.
@@ -74,7 +79,12 @@ def sample_batched(logits, key, *, temperature, top_k=None, vocab_limit: int = 0
     scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
     if top_k is not None:
         scaled = _top_k_filter(scaled, jnp.asarray(top_k, jnp.int32).reshape(B))
-    stochastic = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    if key.ndim == 2:                       # per-row (per-request) keys
+        stochastic = jax.vmap(
+            lambda k, s: jax.random.categorical(k, s))(key, scaled)
+        stochastic = stochastic.astype(jnp.int32)
+    else:
+        stochastic = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
     return jnp.where(temperature > 0.0, stochastic, greedy)
 
 

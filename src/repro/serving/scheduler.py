@@ -1,0 +1,1303 @@
+"""Scheduler layer of the serving engine: continuous batching over the
+jit-program set in serving/programs.py.
+
+The scheduler owns everything host-side: the request queue (FIFO within
+priority classes), slot lifecycle (admit → decode/verify → finalize), the
+paged KV pool / radix trie / snapshot arena bookkeeping, speculative-decode
+drafting, stop sequences, cancellation, per-request RNG chains, **sessions**
+(multi-turn conversations whose end-of-generation state is kept for the next
+turn), and every ``stats()`` counter. All device work is dispatched through
+``EnginePrograms``; see programs.py for the fast-path structure (bucketed
+prefill, chunked decode, paged/radix sharing, snapshots, spec verify) and
+docs/serving.md for the full knob + counter reference.
+
+Public frontends:
+
+* ``repro.serving.server.LLMServer`` — the session-oriented API (streaming
+  handles, cancellation, multi-turn reuse). New code starts there.
+* ``repro.serving.engine.ServingEngine`` — the deprecated PR-1 façade
+  (``submit(prompt, **kwargs)`` / ``generate``), a thin shim over
+  ``enqueue``.
+
+Sessions and multi-turn reuse
+-----------------------------
+
+``open_session()`` returns a session id; every ``enqueue(..., session=sid)``
+is one *turn*. At end of turn the engine keeps the conversation's tail state
+at its exact (non-block-aligned) end-of-generation boundary, per arch
+family:
+
+* **paged** (full-attention archs): the turn's complete KV pages are adopted
+  into the radix trie as usual, and the *partial tail page* — the page
+  holding the positions past the last block boundary, including the
+  generated tokens — stays owned by the session. The next turn's block table
+  is ``radix-matched pages + tail page + fresh pages`` and prefill starts at
+  the exact token the conversation left off, not at the last page boundary.
+* **snapshots** (stateful archs): the slot's complete state is captured into
+  a session-owned arena row at the exact end-of-generation length (trie
+  snapshots only exist at block boundaries). The next turn restores it and
+  prefills only the new message.
+
+Turn N+1 must extend turn N's conversation: the session tracks the
+conversation *text* (submitted prompt + generated output) and, when the new
+prompt extends it, builds the token stream as ``previous tokens +
+encode(delta)`` — exact token-level continuation, immune to tokenizer
+round-trip drift. A prompt that rewrites history just resets the tail and
+falls back to plain radix sharing. Greedy outputs are bit-identical with and
+without session reuse (tests/test_server_api.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.serving import kvpool
+from repro.serving.programs import EnginePrograms, auto_buckets
+from repro.serving.radix import RadixTree
+from repro.serving.spec import NgramDrafter
+from repro.serving.tokenizer import ByteTokenizer
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation parameters (the ``submit()`` kwargs of the
+    deprecated API, plus stop / seed / priority).
+
+    max_new_tokens: output token budget (must leave a >= 1 token prompt
+                    window: max_new_tokens <= capacity - 2).
+    temperature:    0.0 = greedy; > 0 samples on device per slot.
+    top_k:          0 = no filter; >= vocab also degenerates to no filter.
+    stop:           stop strings, checked host-side at every chunk sync on
+                    the decoded text; generation halts at the first token
+                    whose decoded prefix contains a stop and tokens after it
+                    are trimmed from the result (a stop split across a chunk
+                    boundary is still caught — the check sees the full text).
+    seed:           per-request RNG seed. Stochastic sampling draws token t
+                    from fold_in(PRNGKey(seed), t), so the same seed gives
+                    the same output regardless of batch composition or
+                    num_slots. None derives a per-request key from the
+                    engine seed and request id (still composition-
+                    independent, just not caller-chosen). Speculative
+                    temperature slots remain distribution-correct but draw
+                    from the shared verify key — pin outputs with spec off.
+    priority:       admission class; higher admits first, FIFO within a
+                    class (radix-aware admission grouping may still pull a
+                    prefix-sharing request forward within one engine step).
+    """
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    top_k: int = 0
+    stop: Tuple[str, ...] = ()
+    seed: Optional[int] = None
+    priority: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Serving fast-path knobs.
+
+    prefill_buckets: explicit bucket lengths; None → auto powers-of-two;
+                     empty tuple → exact-length prefill (one compile per
+                     distinct prompt length — the pre-fast-path behaviour,
+                     kept for A/B benchmarking).
+    decode_chunk:    decode tokens per jit'd inner loop (1 → one host sync
+                     per token, the pre-fast-path behaviour). All-greedy
+                     batches additionally compile a sampler-free loop body
+                     (no per-step RNG / top-k sort).
+    block_w:         decode-attention KV block; cache capacity is rounded up
+                     to a multiple of it so the kernel never re-pads.
+    donate:          donate the shared cache to prefill/decode jits
+                     (None → auto: on everywhere except CPU, where XLA
+                     ignores donation and warns).
+    cache_mode:      "dense" (PR-1 per-slot cache rows) or "paged" (radix
+                     prefix sharing). On full-attention archs "paged" means
+                     one KV page pool + per-request block tables
+                     (kvpool.supports_paged); on stateful archs (recurrent /
+                     conv / xLSTM / ring-KV — kvpool.supports_snapshots) it
+                     keeps dense rows and shares prefixes through per-prefix
+                     recurrent-state snapshots instead.
+    page_size:       KV tokens per page in paged mode; capacity is rounded up
+                     to a multiple of it. Smaller pages share finer prefixes
+                     at more gather overhead. Snapshot mode reuses it as the
+                     radix block granularity.
+    num_pages:       device pages in the pool (None → auto: trash page +
+                     2 × num_slots × pages-per-request, leaving headroom for
+                     retained prefixes before LRU eviction kicks in).
+    num_snapshots:   snapshot-arena rows in snapshot mode (None → auto:
+                     ~num_slots × boundaries-per-request + headroom). Each
+                     row holds one complete per-sequence state, so memory is
+                     num_snapshots × state-size — size it to taste and let
+                     LRU eviction manage the rest.
+    snap_stride:     radix blocks between snapshot boundaries (1 = capture at
+                     every block, the finest prefix reuse; larger strides
+                     trade hit depth for fewer arena rows and fewer prefill
+                     chunk splits).
+    spec_len:        max draft tokens per speculative verify step (0 = off).
+                     A per-slot n-gram lookup drafter (serving/spec.py, no
+                     draft model) proposes continuations; one verify forward
+                     scores every draft position at once and an accept/
+                     rollback step commits the matched prefix. Greedy slots
+                     accept by exact match (outputs bit-identical to
+                     non-speculative decode); temperature slots use
+                     rejection-sampling acceptance (distribution-correct).
+    spec_ngram_min/max: suffix n-gram lengths the drafter indexes.
+    spec_min_accept: per-slot drafting turns off for the rest of a request
+                     once its acceptance rate drops below this (after
+                     spec_warmup drafted tokens) — unpredictable outputs
+                     then pay zero verify overhead.
+    spec_warmup:     drafted tokens per slot before adaptive disable engages.
+    """
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+    decode_chunk: int = 16
+    block_w: int = 256
+    donate: Optional[bool] = None
+    cache_mode: str = "dense"
+    page_size: int = 16
+    num_pages: Optional[int] = None
+    num_snapshots: Optional[int] = None
+    snap_stride: int = 1
+    spec_len: int = 0
+    spec_ngram_min: int = 2
+    spec_ngram_max: int = 4
+    spec_min_accept: float = 0.35
+    spec_warmup: int = 64
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    rid: int
+    prompt: str
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    top_k: int = 0
+    stop: Tuple[str, ...] = ()
+    priority: int = 0
+    # filled by the engine
+    prompt_tokens: int = 0
+    truncated_tokens: int = 0      # dropped at the hard capacity window
+    prefix_hit_tokens: int = 0     # prompt tokens served from shared pages /
+                                   # restored snapshots / session tail state
+    output_text: str = ""
+    output_ids: Optional[List[int]] = None   # generated token ids (trimmed)
+    output_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    latency_s: float = 0.0
+    admit_index: int = -1
+    finished: bool = False         # finalized or cancelled
+    cancelled: bool = False
+    _submit_t: float = 0.0
+    _ids: Optional[list] = None    # tokenized prompt, cached across admission
+                                   # retries (paged head-of-line waits) and
+                                   # pre-built by session turn continuation
+    _grouped: bool = False         # moved up the queue by radix-aware
+                                   # admission batching (paged mode)
+    _key: Optional[object] = None  # per-request PRNG key (chain base)
+    _key0: Optional[object] = None # fold_in(_key, 0): first-token sample key
+    _sess: Optional[object] = None # owning _SessionState for session turns
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    cache_len: int = 0
+    prompt_len: int = 0
+    remaining: int = 0
+    generated: Optional[list] = None
+    stopped: bool = False                 # device state ran past the kept
+                                          # tokens (stop-sequence trim, or a
+                                          # spec accept truncated at EOS) —
+                                          # tail snapshot capture must skip
+    # paged mode bookkeeping
+    token_ids: Optional[list] = None      # prompt ids (post-truncation)
+    pages_shared: Optional[list] = None   # radix-matched prefix pages (tree-owned)
+    pages_priv: Optional[list] = None     # this request's own pages
+    node: Optional[object] = None         # pinned radix node
+    sess_tail_page: int = -1              # page consumed from the session
+                                          # tail (returned to it on cancel)
+    # speculative decoding bookkeeping
+    drafter: Optional[NgramDrafter] = None
+    spec_on: bool = False                 # adaptive per-slot enable
+    spec_drafted: int = 0                 # draft tokens proposed for this slot
+    spec_accepted: int = 0                # ... of which verify accepted
+
+
+@dataclasses.dataclass
+class _SessionState:
+    """One conversation's retained state between turns.
+
+    ``all_tokens`` is the exact token stream of the conversation so far
+    (prompt + generated, stop-trimmed); its first ``len - 1`` tokens are
+    *processed* (KV / recurrent state exists for them), the final token is
+    the sampled-but-unconsumed continuation. ``text`` is the matching
+    conversation text — the next turn's prompt must extend it for the tail
+    to be reused. Tail resources are owned by the session (never by the
+    radix tree or the free lists): ``tail_page`` in paged mode, ``tail_snap``
+    in snapshot mode, plus a pin (``node``) on the trie path covering the
+    conversation's complete blocks so LRU eviction can't open a gap under
+    the tail.
+    """
+    sid: int
+    text: str = ""
+    all_tokens: List[int] = dataclasses.field(default_factory=list)
+    node: Optional[object] = None
+    tail_page: int = -1
+    tail_snap: int = -1
+    live: Optional[Request] = None
+    turns: int = 0
+
+    @property
+    def tail_len(self) -> int:
+        return max(len(self.all_tokens) - 1, 0)
+
+
+class Scheduler:
+    """Admission / fairness / step-loop layer over ``EnginePrograms``."""
+
+    def __init__(self, cfg, *, num_slots: int = 4, capacity: int = 512,
+                 params=None, seed: int = 0,
+                 engine_cfg: Optional[EngineConfig] = None):
+        self.engine_cfg = engine_cfg or EngineConfig()
+        if self.engine_cfg.decode_chunk < 1:
+            raise ValueError(
+                f"decode_chunk must be >= 1, got {self.engine_cfg.decode_chunk} "
+                "(a zero-length chunk makes no progress)")
+        mode = self.engine_cfg.cache_mode
+        if mode not in ("dense", "paged"):
+            raise ValueError(f"cache_mode must be 'dense' or 'paged', got {mode!r}")
+        # "paged" resolves per arch family: KV page pool for full-attention
+        # archs, per-prefix recurrent-state snapshots for stateful archs
+        self.paged = self.snapshots = False
+        if mode == "paged":
+            ok, why = kvpool.supports_paged(cfg)
+            if ok:
+                self.paged = True
+            else:
+                ok2, why2 = kvpool.supports_snapshots(cfg)
+                if not ok2:
+                    raise ValueError(
+                        f"cache_mode='paged' unsupported for {cfg.name}: "
+                        f"{why}; {why2}")
+                self.snapshots = True
+        if self.engine_cfg.spec_len < 0:
+            raise ValueError(
+                f"spec_len must be >= 0, got {self.engine_cfg.spec_len}")
+        self.spec = self.engine_cfg.spec_len > 0
+        if self.spec and cfg.modality != "text":
+            raise ValueError(
+                "speculative decoding needs token-id inputs; "
+                f"modality={cfg.modality!r} has no n-gram stream to draft "
+                "from")
+        # pure full-attention caches tolerate done-row decode writes (same
+        # position, same value — idempotent); every other cache family keeps
+        # real state that must be frozen for rows sitting a chunk out
+        self._freeze_done_rows = not kvpool.supports_paged(cfg)[0]
+        bw = max(1, self.engine_cfg.block_w)
+        if capacity > bw:
+            capacity = -(-capacity // bw) * bw      # align to kernel block
+        ps = self.engine_cfg.page_size
+        if self.paged or self.snapshots:
+            if ps < 1:
+                raise ValueError(f"page_size must be >= 1, got {ps}")
+        if self.paged:
+            capacity = -(-capacity // ps) * ps      # align to page size
+        self.cfg = dataclasses.replace(cfg, decode_block_w=bw)
+        self.model = Model(self.cfg)
+        self.tokenizer = ByteTokenizer(cfg.vocab_size)
+        self.num_slots = num_slots
+        self.capacity = capacity
+        buckets = self.engine_cfg.prefill_buckets
+        self.buckets: Tuple[int, ...] = (auto_buckets(capacity)
+                                         if buckets is None else
+                                         tuple(sorted(buckets)))
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else self.model.init(key)
+        if self.paged:
+            self._bt_width = capacity // ps
+            n_pages = self.engine_cfg.num_pages
+            if n_pages is None:
+                n_pages = 1 + 2 * num_slots * self._bt_width
+            # self.cache IS the page pool in paged mode: same pytree
+            # structure, batch axis re-purposed as the page axis
+            self.cache = kvpool.init_paged_cache(self.cfg, n_pages, ps)
+            self.kvpool = kvpool.PagePool(n_pages)
+            self.radix = RadixTree(ps)
+            self._bt_device = None      # cached decode block table (device)
+        else:
+            self.cache = self.model.init_cache(num_slots, capacity)
+            self.kvpool = None
+            self.radix = None
+        if self.snapshots:
+            # snapshot mode: dense per-slot rows + a radix trie whose nodes
+            # own rows of a pooled snapshot arena (the model's cache pytree
+            # with batch axis = snapshot slots)
+            self.radix = RadixTree(ps)
+            stride = max(1, self.engine_cfg.snap_stride)
+            n_snaps = self.engine_cfg.num_snapshots
+            if n_snaps is None:
+                n_snaps = 1 + num_slots * (-(-capacity // (ps * stride)) + 2)
+            self.snaps = kvpool.SnapshotArena(n_snaps)
+            self.snap_arena = self.model.init_cache(n_snaps, capacity)
+        else:
+            self.snaps = None
+            self.snap_arena = None
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self._queue: "collections.deque[Request]" = collections.deque()
+        self._rng = jax.random.PRNGKey(seed + 1)   # spec verify/accept key
+        self._req_key_base = jax.random.PRNGKey(seed + 2)
+        self._next_rid = 0
+        self._next_admit = 0
+        self._sessions: Dict[int, _SessionState] = {}
+        self._next_sid = 0
+
+        # perf counters (benchmarks/*.py read these)
+        self._prefill_shapes: set = set()        # 1 jit compile per entry
+        self._extend_shapes: set = set()         # ... for extend chunks
+        self._decode_syncs = 0                   # blocking pulls in decode
+        self._prefill_syncs = 0                  # blocking pulls at admission
+        self._decode_tokens = 0
+        self._decode_chunks = 0
+        self._extend_chunks = 0
+        self._truncated_tokens = 0               # dropped at capacity window
+        self._truncated_requests = 0
+        self._pad_tokens = 0                     # prefill bucket padding waste
+        self._prompt_tokens = 0                  # real (unpadded) prompt tokens
+        self._prefix_hit_tokens = 0              # served from shared prefixes
+        self._draft_tokens = 0                   # spec: tokens proposed
+        self._accepted_tokens = 0                # spec: drafts verify accepted
+        self._verify_steps = 0                   # spec: verify forwards run
+        self._grouped_admissions = 0             # paged/snap: radix-grouped
+        self._snap_hits = 0                      # snap: admissions restored
+        self._snap_misses = 0                    # ... or prefilled from zero
+        self._snap_captures = 0                  # snapshots spliced to arena
+        self._sessions_opened = 0                # session/stream counters
+        self._session_turns = 0
+        self._turn_prefix_hits = 0               # turns admitted off the tail
+        self._cancelled = 0
+        self._stream_chunks = 0                  # bumped by server streaming
+        self._steps = 0                          # engine steps with work
+        self._active_slot_sum = 0                # co-batching: Σ active slots
+
+        donate = self.engine_cfg.donate
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self.progs = EnginePrograms(
+            self.model, self.cfg, self.engine_cfg, capacity=self.capacity,
+            num_slots=num_slots, eos_id=self.tokenizer.eos_id,
+            freeze_done_rows=self._freeze_done_rows, snapshots=self.snapshots,
+            spec=self.spec, donate=donate)
+        self._zero_key = jnp.zeros((2,), jnp.uint32)
+        self._slot_consts = None        # cached (keys, prompt_lens) device
+                                        # arrays; rebuilt on membership change
+
+    # ---- public API --------------------------------------------------------
+    def enqueue(self, prompt: str, params: Optional[SamplingParams] = None,
+                *, session: Optional[int] = None,
+                token_ids: Optional[List[int]] = None) -> Request:
+        """Queue one request (non-blocking). ``session`` makes it a turn of
+        that conversation (one in-flight turn per session); ``token_ids``
+        bypasses tokenization (benchmarks replaying exact streams)."""
+        p = params or SamplingParams()
+        if p.max_new_tokens >= self.capacity - 1:
+            raise ValueError(
+                f"max_new_tokens={p.max_new_tokens} leaves no room for the "
+                f"prompt in a capacity-{self.capacity} cache "
+                f"(need max_new_tokens <= capacity - 2)")
+        if p.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {p.max_new_tokens}")
+        stop = (p.stop,) if isinstance(p.stop, str) else tuple(p.stop or ())
+        self._next_rid += 1
+        req = Request(self._next_rid, prompt, p.max_new_tokens, p.temperature,
+                      p.top_k, stop=stop, priority=p.priority)
+        req._submit_t = time.perf_counter()
+        if token_ids is not None:
+            req._ids = list(token_ids)
+        # per-request RNG chain: token t of this request samples with
+        # fold_in(key, t) — independent of batch composition (programs.py)
+        base = (jax.random.PRNGKey(p.seed) if p.seed is not None
+                else jax.random.fold_in(self._req_key_base, req.rid))
+        req._key = base
+        req._key0 = jax.random.fold_in(base, 0)
+        if session is not None:
+            sess = self._sessions.get(session)
+            if sess is None:
+                raise ValueError(f"unknown session id {session}")
+            if sess.live is not None and not sess.live.finished:
+                raise RuntimeError(
+                    f"session {session} already has turn rid={sess.live.rid} "
+                    "in flight (one turn at a time: turn N+1's prompt "
+                    "depends on turn N's output)")
+            if req._ids is None:
+                if sess.text and prompt.startswith(sess.text) and sess.all_tokens:
+                    # token-level continuation: previous stream + new delta —
+                    # exact, immune to tokenizer round-trip drift over the
+                    # generated tail
+                    delta = prompt[len(sess.text):]
+                    req._ids = list(sess.all_tokens) + (
+                        self.tokenizer.encode(delta, bos=False) if delta
+                        else [])
+                elif sess.text or sess.all_tokens:
+                    # history rewritten: the retained tail no longer applies
+                    self._session_reset_tail(sess)
+            req._sess = sess
+            sess.live = req
+            sess.turns += 1
+            self._session_turns += 1
+        self._insert_by_priority(req)
+        return req
+
+    def _insert_by_priority(self, req: Request):
+        """FIFO within a priority class: insert before the first queued
+        request of strictly lower priority."""
+        q = self._queue
+        if not q or q[-1].priority >= req.priority:
+            q.append(req)
+            return
+        for i, r in enumerate(q):
+            if r.priority < req.priority:
+                q.insert(i, req)
+                return
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a queued or in-flight request: frees its slot, returns its
+        private pages to the pool, unpins its radix node, and (for session
+        turns) leaves the session's retained tail intact so the turn can be
+        retried. Partial output is kept on the request. Returns False if the
+        request already finished."""
+        if req.finished:
+            return False
+        if req in self._queue:
+            self._queue.remove(req)
+            self._finish_cancel(req)
+            return True
+        for si, slot in enumerate(self.slots):
+            if slot.request is req:
+                req.output_ids = list(slot.generated)
+                req.output_tokens = len(slot.generated)
+                req.output_text = self.tokenizer.decode(slot.generated)
+                if self.paged:
+                    priv = list(slot.pages_priv)
+                    if slot.sess_tail_page >= 0 and req._sess is not None:
+                        # the tail page's pre-turn positions are untouched
+                        # (this turn only wrote at/after the tail) — hand it
+                        # back so the retried turn can still reuse it
+                        req._sess.tail_page = slot.sess_tail_page
+                        priv.remove(slot.sess_tail_page)
+                    self.kvpool.free(priv)
+                    self.radix.release(slot.node)
+                    self._bt_device = None
+                elif self.snapshots:
+                    self.radix.release(slot.node)
+                self.slots[si] = _Slot()
+                self._finish_cancel(req)
+                return True
+        return False
+
+    def _finish_cancel(self, req: Request):
+        req.cancelled = True
+        req.finished = True
+        req.latency_s = time.perf_counter() - req._submit_t
+        self._cancelled += 1
+        if req._sess is not None and req._sess.live is req:
+            req._sess.live = None
+
+    # ---- sessions ----------------------------------------------------------
+    def open_session(self) -> int:
+        self._next_sid += 1
+        self._sessions[self._next_sid] = _SessionState(self._next_sid)
+        self._sessions_opened += 1
+        return self._next_sid
+
+    def close_session(self, sid: int):
+        sess = self._sessions.pop(sid, None)
+        if sess is None:
+            return
+        if sess.live is not None and not sess.live.finished:
+            self.cancel(sess.live)
+        self._session_reset_tail(sess)
+
+    def _session_reset_tail(self, sess: _SessionState):
+        """Release everything a session retains between turns."""
+        if sess.tail_page >= 0:
+            self.kvpool.free([sess.tail_page])
+            sess.tail_page = -1
+        if sess.tail_snap >= 0:
+            self.snaps.free([sess.tail_snap])
+            sess.tail_snap = -1
+        if sess.node is not None:
+            self.radix.release(sess.node)
+            sess.node = None
+        sess.text = ""
+        sess.all_tokens = []
+
+    def _tail_usable(self, req: Request, ids: List[int]) -> int:
+        """Token count of the session tail this request can restore (0 = no
+        reuse). The actual (possibly truncated) ids must extend the retained
+        stream and leave >= 1 suffix token to recompute for first-token
+        logits."""
+        sess = req._sess
+        if sess is None or not sess.all_tokens:
+            return 0
+        n = sess.tail_len
+        if n < 1 or n > len(ids) - 1 or ids[:n] != sess.all_tokens[:n]:
+            return 0
+        return n
+
+    # ---- stats -------------------------------------------------------------
+    def stats(self) -> dict:
+        toks = max(self._decode_tokens, 1)
+        out = {
+            "cache_mode": self.engine_cfg.cache_mode,
+            "prefill_compiles": len(self._prefill_shapes),
+            "extend_compiles": len(self._extend_shapes),
+            "prefill_buckets": list(self.buckets),
+            "decode_chunk": self.engine_cfg.decode_chunk,
+            "decode_tokens": self._decode_tokens,
+            "decode_chunks": self._decode_chunks,
+            "extend_chunks": self._extend_chunks,
+            "host_syncs": self._decode_syncs,
+            "host_syncs_per_token": self._decode_syncs / toks,
+            # admission also pulls the first sampled token (once per request,
+            # not per token) — reported separately so the decode-path sync
+            # rate above stays honest
+            "prefill_syncs": self._prefill_syncs,
+            # prompt accounting: hard-window truncation (the seed engine
+            # dropped these silently) and bucket padding waste (compute spent
+            # on pad rows — the knob for tuning prefill_buckets from bench
+            # JSON)
+            "truncated_requests": self._truncated_requests,
+            "truncated_tokens": self._truncated_tokens,
+            "prompt_tokens": self._prompt_tokens,
+            "prefill_pad_tokens": self._pad_tokens,
+            "prefill_pad_frac": self._pad_tokens /
+                max(self._pad_tokens + self._prompt_tokens
+                    - self._prefix_hit_tokens, 1),
+            # speculative decode (all zero when spec_len == 0): drafted vs
+            # verify-accepted tokens, and how many verify forwards ran —
+            # acceptance_rate is the knob for tuning spec_len / the n-gram
+            # range from bench JSON (benchmarks/spec_bench.py)
+            "spec_len": self.engine_cfg.spec_len,
+            "draft_tokens": self._draft_tokens,
+            "accepted_tokens": self._accepted_tokens,
+            "acceptance_rate": self._accepted_tokens /
+                max(self._draft_tokens, 1),
+            "verify_steps": self._verify_steps,
+            # session / stream / scheduling counters (the server frontend):
+            # turn_prefix_hits = turns admitted off a retained session tail;
+            # active_slots_per_step > 1 means concurrent requests actually
+            # co-batch inside one engine step
+            "sessions_opened": self._sessions_opened,
+            "session_turns": self._session_turns,
+            "turn_prefix_hits": self._turn_prefix_hits,
+            "cancelled_requests": self._cancelled,
+            "stream_chunks": self._stream_chunks,
+            "engine_steps": self._steps,
+            "active_slots_per_step": self._active_slot_sum /
+                max(self._steps, 1),
+        }
+        if self.paged or self.snapshots:
+            out.update({
+                "page_size": self.engine_cfg.page_size,
+                "radix_nodes": self.radix.num_nodes,
+                # the headline: prompt tokens served straight from shared
+                # pages / restored state snapshots instead of re-prefilled
+                "prefix_hit_tokens": self._prefix_hit_tokens,
+                "prefix_hit_rate": self._prefix_hit_tokens /
+                    max(self._prompt_tokens, 1),
+                # queued requests admitted in the same engine step as an
+                # earlier request sharing their first radix block (the
+                # shared pages/snapshots are matched while still pinned/hot)
+                "grouped_admissions": self._grouped_admissions,
+            })
+        if self.paged:
+            out.update({
+                "pages_total": self.kvpool.num_pages,
+                "pages_free": self.kvpool.num_free,
+                "pages_peak_in_use": self.kvpool.peak_in_use,
+                "radix_evicted_pages": self.radix.evicted_pages,
+            })
+        if self.snapshots:
+            out.update({
+                # per-prefix recurrent-state snapshot arena: hits restore a
+                # boundary state instead of re-prefilling; misses prefill
+                # from scratch; evictions are LRU trie leaves reclaimed when
+                # the arena fills (tune num_snapshots / snap_stride from
+                # these)
+                "snapshots_total": self.snaps.num_snaps,
+                "snapshots_free": self.snaps.num_free,
+                "snapshots_peak_in_use": self.snaps.peak_in_use,
+                "snapshot_hits": self._snap_hits,
+                "snapshot_misses": self._snap_misses,
+                "snapshot_captures": self._snap_captures,
+                "snapshot_evictions": self.radix.evicted_snaps,
+            })
+        return out
+
+    # ---- engine loop: admission --------------------------------------------
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return n                        # exact-length (legacy) mode
+
+    def _chunk_plan(self, n: int, start: int) -> List[Tuple[int, int, int]]:
+        """Split ``n`` prompt tokens beginning at position ``start`` into
+        prefill chunks: (offset, real_len, padded_len) triples. All chunks
+        but the last are exactly the largest bucket; the last is bucketed
+        (and clamped so the padded write never overruns capacity)."""
+        mb = max(self.buckets) if self.buckets else n
+        plan = []
+        off = 0
+        while off < n:
+            rest = n - off
+            if rest > mb:
+                plan.append((off, mb, mb))
+            else:
+                padded = min(self._bucket_for(rest),
+                             self.capacity - (start + off))
+                plan.append((off, rest, padded))
+            off += plan[-1][1]
+        return plan
+
+    def _chunk_batch(self, ids: List[int], start: int, padded: int):
+        """Device token/position arrays for one right-padded prefill chunk."""
+        padded_ids = ids + [self.tokenizer.pad_id] * (padded - len(ids))
+        tokens = jnp.asarray([padded_ids], jnp.int32)
+        positions = start + jnp.arange(padded, dtype=jnp.int32)[None, :]
+        if self.cfg.modality == "audio_frames":
+            # modality stub: frame embeddings stand in for token ids
+            tokens = jax.nn.one_hot(tokens % self.cfg.d_model, self.cfg.d_model,
+                                    dtype=jnp.dtype(self.cfg.dtype))
+        return tokens, positions
+
+    def _encode_prompt(self, req: Request) -> List[int]:
+        """Tokenize + clamp to the capacity window, counting what was cut
+        (the seed engine dropped tokens here with no trace at all)."""
+        window = self.capacity - req.max_new_tokens - 1   # >= 1 (enqueue guard)
+        if req._ids is None:
+            req._ids = self.tokenizer.encode(req.prompt)
+        full = req._ids
+        ids = full[-window:]
+        req.truncated_tokens = len(full) - len(ids)
+        if req.truncated_tokens:
+            self._truncated_tokens += req.truncated_tokens
+            self._truncated_requests += 1
+        req.prompt_tokens = len(ids)
+        self._prompt_tokens += len(ids)
+        return ids
+
+    def _uncount_prompt(self, req: Request, ids: List[int]):
+        """Roll back _encode_prompt's counters when admission fails and the
+        request stays at the queue head."""
+        self._prompt_tokens -= len(ids)
+        if req.truncated_tokens:
+            self._truncated_tokens -= req.truncated_tokens
+            self._truncated_requests -= 1
+
+    def _prefill_span(self, si: int, req: Request, ids: List[int],
+                      start: int, end: int, *, sample: bool):
+        """Prefill ``ids[start:end]`` into slot ``si`` in bucketed chunks.
+
+        ``start == 0`` opens with the bucketed prefill (fresh cache row — it
+        always unembeds one position and samples; a non-final span discards
+        that token); every other chunk is an ``extend`` continuation against
+        the already-filled row (restored snapshot / session tail included)
+        that unembeds + samples only when it is the last chunk and
+        ``sample``. Returns the last chunk's sampled token.
+        """
+        plan = self._chunk_plan(end - start, start)
+        tok = None
+        for ci, (off, real, padded) in enumerate(plan):
+            o = start + off
+            tokens, positions = self._chunk_batch(ids[o:o + real], o, padded)
+            self._pad_tokens += padded - real
+            last = ci == len(plan) - 1
+            if o == 0:
+                self._prefill_shapes.add((padded, self.cfg.modality))
+                self.cache, t = self.progs.prefill(
+                    self.params, self.cache, tokens, positions,
+                    jnp.int32(si), jnp.int32(real), req._key0,
+                    jnp.float32(req.temperature), jnp.int32(req.top_k))
+            else:
+                self._extend_shapes.add((padded, self.cfg.modality))
+                self._extend_chunks += 1
+                self.cache, t = self.progs.extend(
+                    self.params, self.cache, tokens, positions,
+                    jnp.int32(si), jnp.int32(o), jnp.int32(real), req._key0,
+                    jnp.float32(req.temperature), jnp.int32(req.top_k),
+                    sample=sample and last)
+            if last:
+                tok = t
+        return tok
+
+    def _activate(self, si: int, slot: _Slot, req: Request, ids: List[int],
+                  first) -> None:
+        """Common post-prefill slot activation + the one admission sync."""
+        slot.request = req
+        slot.cache_len = len(ids)
+        slot.prompt_len = len(ids)
+        slot.remaining = req.max_new_tokens - 1
+        slot.generated = [int(first)]                     # one host sync
+        self._arm_spec(slot, ids)
+        self._slot_consts = None        # slot membership changed
+        self._prefill_syncs += 1
+
+    def _admit_dense(self, si: int, slot: _Slot, req: Request):
+        ids = self._encode_prompt(req)
+        first = self._prefill_span(si, req, ids, 0, len(ids), sample=True)
+        self._activate(si, slot, req, ids, first)
+        slot.token_ids = ids        # sessions track the exact token stream
+                                    # (dense mode reuses nothing, but turn
+                                    # continuation must still be token-exact)
+        return True
+
+    def _admit_paged(self, si: int, slot: _Slot, req: Request):
+        """Paged admission: radix-match the prompt, reserve pages, prefill
+        only the un-matched suffix. A session turn that extends its retained
+        conversation additionally reuses the session's partial tail page and
+        starts at the exact (non-block-aligned) position the conversation
+        left off. Returns False (request stays queued) when the pool can't
+        supply pages even after LRU eviction."""
+        ids = self._encode_prompt(req)
+        ps = self.engine_cfg.page_size
+        sess = req._sess
+        # always recompute at least the last prompt token (its logits seed
+        # the first sampled token), so cap the usable match one token short
+        shared, node = self.radix.match(ids[:len(ids) - 1])
+        tail_len = self._tail_usable(req, ids)
+        # the tail page only adjoins gap-free if the radix (pinned by the
+        # session since last turn) still covers every complete block below it
+        use_tail = (tail_len > len(shared) * ps and sess.tail_page >= 0
+                    and len(shared) == tail_len // ps)
+        prefix_len = tail_len if use_tail else len(shared) * ps
+        total_pages = -(-min(len(ids) + req.max_new_tokens + 1,
+                             self.capacity) // ps)
+        n_have = len(shared) + (1 if use_tail else 0)
+        priv = self.kvpool.alloc(total_pages - n_have)
+        if priv is None:
+            freed = self.radix.evict(total_pages - n_have
+                                     - self.kvpool.num_free)
+            self.kvpool.free(freed)
+            priv = self.kvpool.alloc(total_pages - n_have)
+        if priv is None:
+            self.radix.release(node)
+            # un-count this attempt; the request stays at the queue head
+            self._uncount_prompt(req, ids)
+            return False
+        if use_tail:
+            # the tail page transfers to this request's private chain; on
+            # cancel it goes back to the session, on finalize it re-enters
+            # the normal adopt-or-retail flow
+            slot.sess_tail_page = sess.tail_page
+            priv = [sess.tail_page] + priv
+            sess.tail_page = -1
+        if tail_len and prefix_len >= tail_len:
+            # the whole retained conversation was served from reuse — the
+            # session tail, or a radix path another request drove deeper
+            self._turn_prefix_hits += 1
+        req.prefix_hit_tokens = prefix_len
+        self._prefix_hit_tokens += prefix_len
+        bt = kvpool.block_table_array([shared + priv], self._bt_width)
+        first = None
+        plan = self._chunk_plan(len(ids) - prefix_len, prefix_len)
+        for ci, (off, real, padded) in enumerate(plan):
+            start = prefix_len + off
+            tokens, positions = self._chunk_batch(
+                ids[start:start + real], start, padded)
+            self._pad_tokens += padded - real
+            self._extend_shapes.add((padded, self.cfg.modality))
+            self._extend_chunks += 1
+            self.cache, tok = self.progs.extend_paged(
+                self.params, self.cache, tokens, positions, bt,
+                jnp.int32(start), jnp.int32(real), req._key0,
+                jnp.float32(req.temperature), jnp.int32(req.top_k),
+                sample=ci == len(plan) - 1)
+            if ci == len(plan) - 1:
+                first = tok
+        self._activate(si, slot, req, ids, first)
+        slot.token_ids = ids
+        slot.pages_shared = shared
+        slot.pages_priv = priv
+        slot.node = node
+        self._bt_device = None          # slot membership changed
+        self._group_queue(ids)
+        return True
+
+    def _capture_snapshot(self, si: int) -> int:
+        """Splice slot ``si``'s current state into a fresh arena row.
+        Returns the slot id, or -1 when the arena stays full even after LRU
+        trie eviction (every row backs a pinned path) — the capture is then
+        skipped; correctness is untouched, only future hit depth."""
+        sid = self.snaps.alloc()
+        if sid is None:
+            self.snaps.free(self.radix.evict_snaps(1))
+            sid = self.snaps.alloc()
+        if sid is None:
+            return -1
+        self.snap_arena = self.progs.snap_capture(self.snap_arena, self.cache,
+                                                  jnp.int32(sid),
+                                                  jnp.int32(si))
+        self._snap_captures += 1
+        return sid
+
+    def _admit_snap(self, si: int, slot: _Slot, req: Request):
+        """Snapshot-mode admission (stateful archs under cache_mode="paged"):
+        radix-match the prompt, restore the nearest per-prefix state
+        snapshot into the slot — or, for a session turn extending its
+        conversation, the session's end-of-generation tail snapshot at its
+        exact non-block-aligned length — and prefill only the suffix,
+        capturing new snapshots at every ``snap_stride``-block boundary
+        along the way and adopting them into the trie immediately, so the
+        rest of THIS engine step's grouped admissions already reuse them.
+        Never fails: snapshots take no pages, and a full arena only skips
+        captures."""
+        ids = self._encode_prompt(req)
+        ps = self.engine_cfg.page_size
+        sess = req._sess
+        # always recompute at least the last prompt token (its logits seed
+        # the first sampled token), so cap the usable match one token short
+        _, node = self.radix.match(ids[:len(ids) - 1])
+        sid, sblocks = self.radix.nearest_snapshot(node)
+        restore = sblocks * ps
+        tail_len = self._tail_usable(req, ids)
+        if tail_len > restore and sess.tail_snap >= 0:
+            # session tail beats the deepest block-aligned trie snapshot
+            self.cache = self.progs.snap_restore(self.cache, self.snap_arena,
+                                                 jnp.int32(sess.tail_snap),
+                                                 jnp.int32(si))
+            restore = tail_len
+            self._snap_hits += 1
+        elif sid >= 0:
+            self.cache = self.progs.snap_restore(self.cache, self.snap_arena,
+                                                 jnp.int32(sid), jnp.int32(si))
+            self._snap_hits += 1
+        else:
+            self._snap_misses += 1
+        if tail_len and restore >= tail_len:
+            self._turn_prefix_hits += 1
+        req.prefix_hit_tokens = restore
+        self._prefix_hit_tokens += restore
+        stride = ps * max(1, self.engine_cfg.snap_stride)
+        bounds = set(range((restore // stride + 1) * stride,
+                           len(ids) + 1, stride))
+        new_snaps = {}
+        pos, first = restore, None
+        for end in sorted(bounds | {len(ids)}):
+            first = self._prefill_span(si, req, ids, pos, end,
+                                       sample=end == len(ids))
+            if end in bounds:
+                s = self._capture_snapshot(si)
+                if s >= 0:
+                    new_snaps[end // ps] = s
+            pos = end
+        if new_snaps:
+            hi = max(new_snaps) * ps
+            self.snaps.free(self.radix.insert_snaps(ids[:hi], new_snaps))
+        self._activate(si, slot, req, ids, first)
+        slot.token_ids = ids
+        slot.node = node
+        self._group_queue(ids)
+        return True
+
+    def _arm_spec(self, slot: _Slot, ids: List[int]):
+        """Index the request's context for the n-gram drafter (prompt + the
+        first sampled token; decode/verify commits extend it)."""
+        if not self.spec:
+            return
+        slot.drafter = NgramDrafter(ids + slot.generated,
+                                    n_min=self.engine_cfg.spec_ngram_min,
+                                    n_max=self.engine_cfg.spec_ngram_max)
+        slot.spec_on = True
+
+    def _group_queue(self, ids: List[int]):
+        """Radix-aware admission batching (paged): stable-move queued
+        requests whose (truncated) prompt shares the just-admitted prompt's
+        first radix block to the queue front, so the remaining free slots of
+        THIS engine step admit them while the shared prefix pages are pinned
+        and hot — N agents sharing a system prompt prefill it once and join
+        the same decode batch. FIFO order survives within the group and the
+        remainder (a grouped request may jump a higher priority class for
+        this one step — the shared-prefix locality win is worth it)."""
+        ps = self.engine_cfg.page_size
+        # queue[0] is the request being admitted right now — skip it
+        if len(ids) < ps or len(self._queue) < 2:
+            return
+        head = tuple(ids[:ps])
+        grouped, rest = [], []
+        for r in list(self._queue)[1:]:
+            if r._ids is None:
+                r._ids = self.tokenizer.encode(r.prompt)
+            rids = r._ids[-(self.capacity - r.max_new_tokens - 1):]
+            if len(rids) >= ps and tuple(rids[:ps]) == head:
+                r._grouped = True
+                grouped.append(r)
+            else:
+                rest.append(r)
+        if grouped:
+            self._queue = collections.deque(
+                [self._queue[0]] + grouped + rest)
+
+    def _admit(self):
+        """Prefill queued requests into free slots (continuous batching).
+
+        Paged mode admits FIFO within priority classes: if the pool can't
+        cover the head request the whole admission round stops (no smaller
+        request jumps the line), and the head retries next step once decode
+        frees pages.
+        """
+        for si, slot in enumerate(self.slots):
+            if slot.request is not None or not self._queue:
+                continue
+            req = self._queue[0]
+            t0 = time.perf_counter()
+            admit = (self._admit_paged if self.paged else
+                     self._admit_snap if self.snapshots else
+                     self._admit_dense)
+            admitted = admit(si, slot, req)
+            if not admitted:
+                if not self._active():
+                    raise RuntimeError(
+                        f"paged KV pool too small: request rid={req.rid} "
+                        f"needs more pages than the pool can ever free "
+                        f"(num_pages={self.kvpool.num_pages}, "
+                        f"page_size={self.engine_cfg.page_size})")
+                break
+            self._queue.popleft()
+            if req._grouped:
+                self._grouped_admissions += 1
+                req._grouped = False
+            req.admit_index = self._next_admit
+            self._next_admit += 1
+            req.prefill_s += time.perf_counter() - t0
+        # grouping credit is same-step only: a sharer still queued when the
+        # round ends admits later on its own (the pinned pages may be gone)
+        for r in self._queue:
+            r._grouped = False
+
+    def _active(self):
+        return [i for i, s in enumerate(self.slots) if s.request is not None]
+
+    # ---- stop sequences ----------------------------------------------------
+    def _apply_stop(self, slot: _Slot) -> bool:
+        """Host-side stop-sequence check at the per-chunk sync: halt at the
+        first token whose decoded prefix contains a stop string and trim the
+        tokens after it from the result (token granularity — the stop may
+        end mid-token). The full decoded text is searched, so a stop split
+        across a chunk boundary is caught the moment its last piece lands."""
+        req = slot.request
+        if not req.stop or slot.stopped:
+            return slot.stopped
+        text = self.tokenizer.decode(slot.generated)
+        if not any(s in text for s in req.stop):
+            return False
+        for n in range(1, len(slot.generated) + 1):
+            t = self.tokenizer.decode(slot.generated[:n])
+            if any(s in t for s in req.stop):
+                slot.generated = slot.generated[:n]
+                slot.stopped = True
+                return True
+        return False                                      # unreachable
+
+    # ---- finalize ----------------------------------------------------------
+    def _finalize(self, si: int):
+        slot = self.slots[si]
+        req = slot.request
+        sess = req._sess
+        req.output_ids = list(slot.generated)
+        req.output_tokens = len(slot.generated)
+        req.output_text = self.tokenizer.decode(slot.generated)
+        req.latency_s = time.perf_counter() - req._submit_t
+        all_tokens = (slot.token_ids if slot.token_ids is not None
+                      else []) + slot.generated
+        # positions the cache truly covers for the *trimmed* output (the
+        # final generated token is sampled but never processed; a stop trim
+        # shrinks this below slot.cache_len)
+        kv_cover = max(len(all_tokens) - 1, 0)
+        if self.paged:
+            # donate the finished sequence's complete pages to the radix tree
+            # (prompt + generated tokens: the next agent turn's prompt embeds
+            # this whole conversation, so it will match deep), free the rest
+            ps = self.engine_cfg.page_size
+            n_complete = kv_cover // ps
+            bt_pages = slot.pages_shared + slot.pages_priv
+            rejected = self.radix.insert(all_tokens[:n_complete * ps],
+                                         bt_pages[:n_complete])
+            if sess is not None and not req.cancelled:
+                leftover = rejected + bt_pages[n_complete:]
+                tail_page = -1
+                if kv_cover % ps and bt_pages[n_complete] not in rejected:
+                    # the partial tail page: positions past the last block
+                    # boundary, generated tokens included — the session keeps
+                    # it so the next turn restores at the exact end of this
+                    # one instead of the last page boundary
+                    tail_page = bt_pages[n_complete]
+                    leftover = [p for p in leftover if p != tail_page]
+                self.kvpool.free(leftover)
+                # re-pin the trie path under the (possibly deeper) complete
+                # prefix so eviction can't open a gap below the tail
+                _, new_node = self.radix.match(all_tokens[:n_complete * ps])
+                self.radix.release(slot.node)
+                if sess.node is not None:
+                    self.radix.release(sess.node)
+                if sess.tail_page >= 0:          # superseded tail
+                    self.kvpool.free([sess.tail_page])
+                sess.node = new_node
+                sess.tail_page = tail_page
+            else:
+                self.kvpool.free(rejected + bt_pages[n_complete:])
+                self.radix.release(slot.node)
+            self._bt_device = None      # slot membership changed
+        elif self.snapshots:
+            # prefix snapshots were adopted into the trie at admission; a
+            # session turn additionally captures the end-of-generation state
+            # at its exact (non-block-aligned) length into a session-owned
+            # arena row — the trie can't index it, the session can
+            if sess is not None and not req.cancelled:
+                new_snap = -1 if slot.stopped else self._capture_snapshot(si)
+                if sess.tail_snap >= 0:
+                    self.snaps.free([sess.tail_snap])
+                sess.tail_snap = new_snap
+                # transfer the admission pin: it covers the prompt path the
+                # next turn will re-match
+                if sess.node is not None:
+                    self.radix.release(sess.node)
+                sess.node = slot.node
+            else:
+                self.radix.release(slot.node)
+        if sess is not None and not req.cancelled:
+            # a stop trim / EOS-truncated spec accept leaves device state
+            # past the kept tokens: the token stream is still exact
+            # (kv_cover shrank with it), but the snapshot capture above is
+            # skipped since the state ran ahead (KV pages are per-position,
+            # so the paged tail page stays valid either way)
+            sess.all_tokens = all_tokens
+            sess.text = req.prompt + req.output_text
+            if sess.live is req:
+                sess.live = None
+        req.finished = True
+        self.slots[si] = _Slot()
+
+    # ---- speculative decode pass -------------------------------------------
+    def _spec_pass(self, active) -> set:
+        """One speculative verify pass, interleaved with the chunked-decode
+        loop: slots whose drafter has a proposal verify it this step; the
+        returned set sits out the decode chunk. Falls back to plain chunked
+        decode (empty set) when no slot has a draft, so non-copyable
+        workloads pay nothing but the host-side n-gram lookups."""
+        eos = self.tokenizer.eos_id
+        live = []
+        for i in active:
+            s = self.slots[i]
+            # same conditions the decode loop's entry done-mask would catch
+            if (s.remaining <= 0 or s.cache_len >= self.capacity - 1
+                    or s.generated[-1] == eos):
+                self._finalize(i)
+                continue
+            live.append(i)
+        if not live:
+            return set(active)
+        drafts = {}
+        for i in live:
+            s = self.slots[i]
+            d = []
+            if s.spec_on:
+                # the +1 correction/bonus token must fit the budget and the
+                # capacity window, and draft writes must stay in bounds
+                cap = min(self.engine_cfg.spec_len, s.remaining - 1,
+                          self.capacity - 2 - s.cache_len)
+                if cap > 0:
+                    d = s.drafter.draft(cap)
+            drafts[i] = d
+        drafted = [i for i in live if drafts[i]]
+        if not drafted:
+            return set()
+        # only drafted slots verify; the rest keep the chunked decode loop
+        # (a disabled or draftless slot must not degrade to one-token steps)
+        self._spec_step_batched(drafted, drafts)
+        return set(drafted)
+
+    def _spec_step_batched(self, live, drafts):
+        """ONE jit'd verify forward scores every drafted slot's proposal at
+        once, for every arch (rows of undrafted slots carry lens=0 — no
+        reads, no writes, no commits). Rollback: linear full-attention K/V
+        is masked by cache position until overwritten; recurrent / conv /
+        xLSTM / ring-KV state rewinds to each row's accepted length inside
+        the same jit (``model.verify_commit``)."""
+        t0 = time.perf_counter()
+        S = self.engine_cfg.spec_len + 1
+        tok_rows = [[0] * S for _ in range(self.num_slots)]
+        lens = [0] * self.num_slots
+        for i in live:
+            s = self.slots[i]
+            row = [s.generated[-1]] + drafts[i]
+            lens[i] = len(row)
+            tok_rows[i][:len(row)] = row
+        tokens = jnp.asarray(tok_rows, jnp.int32)
+        lens_a = jnp.asarray(lens, jnp.int32)
+        clens = jnp.asarray([s.cache_len for s in self.slots], jnp.int32)
+        # the same greedy/temps/top-k static specialization as the decode loop
+        sampling = any(self.slots[i].request.temperature > 0.0 for i in live)
+        temps = (jnp.asarray([s.request.temperature if s.request else 0.0
+                              for s in self.slots], jnp.float32)
+                 if sampling else None)
+        top_ks = (jnp.asarray([s.request.top_k if s.request else 0
+                               for s in self.slots], jnp.int32)
+                  if sampling and any(self.slots[i].request.top_k > 0
+                                      for i in live)
+                  else None)
+        self._rng, k = jax.random.split(self._rng)
+        bt = self._decode_block_tables()
+        self.cache, out_tok, out_len = self.progs.verify(
+            self.params, self.cache, tokens, clens, lens_a, temps, top_ks,
+            k, bt)
+        # the ONE host sync of the verify step
+        out_tok, out_len = jax.device_get((out_tok, out_len))
+        self._decode_syncs += 1
+        self._verify_steps += 1
+        dt = time.perf_counter() - t0
+        for i in live:
+            self._commit_spec(i, drafts[i], out_tok[i], int(out_len[i]),
+                              dt / len(live))
+
+    def _commit_spec(self, si, draft, out_row, n, dt):
+        """Commit one slot's verify outcome: n = accepted drafts + 1
+        correction/bonus token, truncated at the first EOS."""
+        slot = self.slots[si]
+        eos = self.tokenizer.eos_id
+        emitted = [int(t) for t in out_row[:n]]
+        for j, t in enumerate(emitted):
+            if t == eos:
+                emitted = emitted[:j + 1]
+                break
+        if len(emitted) < n:
+            # accepted drafts past the EOS were already committed into the
+            # device state (verify_commit rewinds to the accepted length,
+            # not the EOS) — the state now runs ahead of the kept tokens,
+            # exactly like a stop trim: a session tail snapshot captured
+            # from it would corrupt the next turn, so flag the slot
+            slot.stopped = True
+        slot.generated.extend(emitted)
+        slot.drafter.extend(emitted)
+        slot.cache_len += len(emitted)
+        slot.remaining -= len(emitted)
+        slot.spec_drafted += len(draft)
+        slot.spec_accepted += n - 1
+        self._draft_tokens += len(draft)
+        self._accepted_tokens += n - 1
+        self._decode_tokens += len(emitted)
+        slot.request.decode_s += dt
+        ecfg = self.engine_cfg
+        if (slot.spec_on and slot.spec_drafted >= ecfg.spec_warmup
+                and slot.spec_accepted <
+                ecfg.spec_min_accept * slot.spec_drafted):
+            slot.spec_on = False        # this request isn't n-gram-predictable
+        stopped = self._apply_stop(slot)
+        if (stopped or slot.remaining <= 0 or slot.generated[-1] == eos
+                or slot.cache_len >= self.capacity - 1):
+            self._finalize(si)
+
+    # ---- engine step --------------------------------------------------------
+    def _decode_block_tables(self):
+        """Per-slot block tables for the decode/verify jits (paged mode):
+        the table only changes when slot membership does — cached on device
+        between chunks; empty slots point at the trash page."""
+        if not self.paged:
+            return None
+        if self._bt_device is None:
+            self._bt_device = kvpool.block_table_array(
+                [(s.pages_shared + s.pages_priv) if s.request else []
+                 for s in self.slots], self._bt_width)
+        return self._bt_device
+
+    def step(self):
+        """One engine iteration: admit, then one speculative verify pass for
+        slots with drafts (when spec is on) and/or one chunked decode for
+        the rest."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return False
+        # co-batching telemetry: how many requests actually share this step
+        self._steps += 1
+        self._active_slot_sum += len(active)
+        handled = self._spec_pass(active) if self.spec else set()
+        rest = [i for i in self._active() if i not in handled]
+        if not rest:
+            return True
+        t0 = time.perf_counter()
+        last = jnp.asarray([s.generated[-1] if s.request else 0
+                            for s in self.slots], jnp.int32)
+        clens = jnp.asarray([s.cache_len for s in self.slots], jnp.int32)
+        rem = jnp.asarray([s.remaining for s in self.slots], jnp.int32)
+        # spec-handled slots sit this chunk out via the done mask (they
+        # already advanced up to spec_len+1 tokens this step)
+        done = jnp.asarray([i in handled or s.request is None
+                            or s.remaining <= 0
+                            or s.cache_len >= self.capacity - 1
+                            or s.generated[-1] == self.tokenizer.eos_id
+                            for i, s in enumerate(self.slots)], bool)
+        # static specialization: an all-greedy batch (the common agent case)
+        # compiles a loop body with no RNG fold / categorical / top-k sort —
+        # jit re-specializes on the None-vs-array structure, so at most three
+        # decode variants ever compile (greedy / temps / temps+top-k)
+        sampling = any(s.request.temperature > 0.0
+                       for s in self.slots if s.request)
+        temps = (jnp.asarray([s.request.temperature if s.request else 0.0
+                              for s in self.slots], jnp.float32)
+                 if sampling else None)
+        top_ks = (jnp.asarray([s.request.top_k if s.request else 0
+                               for s in self.slots], jnp.int32)
+                  if sampling and any(s.request.top_k > 0
+                                      for s in self.slots if s.request)
+                  else None)
+        # per-request RNG chains: row b samples its t-th token with
+        # fold_in(keys[b], t), t derived in-jit from cache_lens and the
+        # prompt length — reproducible per request whatever the batch
+        # composition. keys/prompt_lens only change with slot membership,
+        # so they are cached on device (greedy batches trace no RNG at all).
+        if self._slot_consts is None:
+            self._slot_consts = (
+                jnp.stack([s.request._key if s.request else self._zero_key
+                           for s in self.slots]),
+                jnp.asarray([s.prompt_len for s in self.slots], jnp.int32))
+        keys, plens = self._slot_consts
+        bt = self._decode_block_tables()
+
+        self.cache, tok_buf, emit_buf, clens, rem, done = \
+            self.progs.decode_chunk(self.params, self.cache, last, clens, rem,
+                                    done, temps, top_ks, keys, plens, bt)
+        # the ONE host sync of the chunk: pull tokens + masks + slot state
+        tok_buf, emit_buf, clens_h, rem_h, done_h = jax.device_get(
+            (tok_buf, emit_buf, clens, rem, done))
+        self._decode_syncs += 1
+        self._decode_chunks += 1
+        dt = time.perf_counter() - t0
+
+        emitted = 0
+        for i in rest:
+            slot = self.slots[i]
+            new = tok_buf[:, i][emit_buf[:, i]]
+            slot.generated.extend(int(t) for t in new)
+            if slot.drafter is not None and new.size:
+                slot.drafter.extend([int(t) for t in new])
+            emitted += int(new.size)
+            slot.cache_len = int(clens_h[i])
+            slot.remaining = int(rem_h[i])
+            slot.request.decode_s += dt / max(len(rest), 1)
+        self._decode_tokens += emitted
+        for i in rest:
+            stopped = self._apply_stop(self.slots[i])
+            if stopped or bool(done_h[i]):
+                self._finalize(i)
+        return True
+
+    def run_until_drained(self):
+        while self.step() or self._queue:
+            pass

@@ -1,0 +1,260 @@
+"""Session-oriented continuous-batching serving frontend.
+
+``LLMServer`` is the public face of the serving stack (the redesign of the
+blocking ``ServingEngine.submit()/run_until_drained()`` loop): requests are
+submitted as non-blocking **handles**, conversations live in **sessions**
+whose end-of-generation state is retained for the next turn, output streams
+incrementally off the engine's per-chunk host sync, and any handle can be
+**cancelled** mid-flight.
+
+    server = LLMServer(cfg, num_slots=4, capacity=512,
+                       engine_cfg=EngineConfig(cache_mode="paged"))
+    sess = server.open_session()
+    h = sess.submit(conversation_text, SamplingParams(max_new_tokens=64))
+    for piece in h.stream():          # incremental detokenized text
+        print(piece, end="")
+    text = h.result()                 # or just block for the full output
+
+Concurrency model: the server is cooperative, not threaded. ``submit`` only
+queues; ``step()`` runs ONE engine iteration (admission + one decode chunk /
+verify pass for every live slot) and distributes freshly decoded text to the
+live handles. ``handle.stream()`` / ``handle.result()`` pump ``step()``
+until their request completes — so N handles submitted before any of them
+is drained co-batch inside the same engine steps, which is exactly how N
+concurrent agent workflows share one model (``stats()
+["active_slots_per_step"]`` measures it; benchmarks/session_bench.py gates
+on it).
+
+Multi-turn reuse: a ``Session`` tracks its conversation; when turn N+1's
+prompt extends turn N's text, the engine restores the retained tail state
+(partial KV tail page on full-attention archs, end-of-generation state
+snapshot on stateful archs — both at exact, non-block-aligned boundaries)
+and prefills only the new message. See serving/scheduler.py for the
+mechanics and docs/serving.md for the full reference.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Iterator, List, Optional
+
+from repro.serving.scheduler import (EngineConfig, Request, SamplingParams,
+                                     Scheduler)
+
+__all__ = ["LLMServer", "Session", "Handle", "SamplingParams", "EngineConfig"]
+
+
+def _utf8_holdback(ids: List[int]) -> int:
+    """How many trailing tokens to withhold from an incremental decode:
+    raw byte tokens (< 0x100) forming an incomplete UTF-8 sequence decode
+    to replacement characters on their own, so the stream holds them back
+    until the sequence completes (at most 3 tokens). Merge and special
+    tokens are self-contained and never held."""
+    n = 0
+    i = len(ids) - 1
+    while i >= 0 and n < 3 and 0x80 <= ids[i] <= 0xBF:   # continuation bytes
+        i -= 1
+        n += 1
+    if i >= 0 and 0xC2 <= ids[i] <= 0xF4:                # lead byte
+        need = 2 if ids[i] < 0xE0 else 3 if ids[i] < 0xF0 else 4
+        if 1 + n < need:
+            return n + 1                                 # lead + partial tail
+    return 0
+
+
+class Handle:
+    """One in-flight (or finished) request.
+
+    ``status`` is one of ``"queued"`` / ``"running"`` / ``"done"`` /
+    ``"cancelled"``. ``text`` is everything streamed so far; after
+    completion it equals ``result()`` (stop-trimmed).
+    """
+
+    def __init__(self, server: "LLMServer", request: Request):
+        self._server = server
+        self.request = request
+        self.text = ""
+        self._pending: "collections.deque[str]" = collections.deque()
+        self._sent = 0                  # generated tokens already delivered
+
+    @property
+    def status(self) -> str:
+        if self.request.cancelled:
+            return "cancelled"
+        if self.request.finished:
+            return "done"
+        return "running" if self.request.admit_index >= 0 else "queued"
+
+    @property
+    def done(self) -> bool:
+        return self.request.finished
+
+    def stream(self) -> Iterator[str]:
+        """Yield detokenized text increments as they decode (one per engine
+        chunk that emitted new text for this request). Pumps the server
+        between yields, so concurrently submitted handles keep decoding —
+        their increments buffer in their own handles."""
+        while True:
+            while self._pending:
+                yield self._pending.popleft()
+            if self.request.finished:
+                return
+            self._server.step()
+
+    def result(self) -> str:
+        """Block (cooperatively) until the request finishes; returns the
+        full output text. A cancelled handle returns its partial output."""
+        for _ in self.stream():
+            pass
+        return self.request.output_text
+
+    def cancel(self) -> bool:
+        return self._server.cancel(self)
+
+    # server-side delivery
+    def _push(self, piece: str):
+        self._pending.append(piece)
+        self.text += piece
+
+
+class Session:
+    """One multi-turn conversation on an ``LLMServer``.
+
+    Submit each turn's prompt as the FULL conversation text (what an agent
+    frontend naturally re-sends); when it extends the previous turn's
+    ``text`` (prompt + generated output), the engine reuses the retained
+    end-of-generation state and prefills only the new part. One turn may be
+    in flight at a time — turn N+1's prompt depends on turn N's output.
+    """
+
+    def __init__(self, server: "LLMServer", sid: int):
+        self._server = server
+        self.sid = sid
+        self.closed = False
+
+    @property
+    def text(self) -> str:
+        """Conversation so far: last submitted prompt + its generated
+        output. Build the next turn's prompt by appending to this."""
+        sess = self._server.engine._sessions.get(self.sid)
+        return sess.text if sess is not None else ""
+
+    @property
+    def turns(self) -> int:
+        sess = self._server.engine._sessions.get(self.sid)
+        return sess.turns if sess is not None else 0
+
+    @property
+    def busy(self) -> bool:
+        """True while a turn of this session is still queued or running."""
+        sess = self._server.engine._sessions.get(self.sid)
+        return (sess is not None and sess.live is not None
+                and not sess.live.finished)
+
+    def submit(self, prompt: str,
+               params: Optional[SamplingParams] = None) -> Handle:
+        if self.closed:
+            raise RuntimeError(f"session {self.sid} is closed")
+        return self._server.submit(prompt, params, session=self.sid)
+
+    def close(self):
+        """Release the session's retained tail state (pages / snapshot /
+        radix pins); cancels a still-running turn."""
+        if not self.closed:
+            self._server.engine.close_session(self.sid)
+            self.closed = True
+
+
+class LLMServer:
+    """Session-oriented continuous-batching server over the scheduler."""
+
+    def __init__(self, cfg, *, num_slots: int = 4, capacity: int = 512,
+                 params=None, seed: int = 0,
+                 engine_cfg: Optional[EngineConfig] = None):
+        self.engine = Scheduler(cfg, num_slots=num_slots, capacity=capacity,
+                                params=params, seed=seed,
+                                engine_cfg=engine_cfg)
+        self._handles: "dict[int, Handle]" = {}       # rid -> live handle
+
+    # convenient passthroughs
+    @property
+    def params(self):
+        return self.engine.params
+
+    @property
+    def capacity(self) -> int:
+        return self.engine.capacity
+
+    def stats(self) -> dict:
+        return self.engine.stats()
+
+    # ---- sessions / submission ---------------------------------------------
+    def open_session(self) -> Session:
+        return Session(self, self.engine.open_session())
+
+    def submit(self, prompt: str, params: Optional[SamplingParams] = None,
+               *, session: Optional[int] = None,
+               token_ids: Optional[List[int]] = None) -> Handle:
+        """Queue a request (non-blocking) and return its handle. Nothing
+        runs until someone pumps ``step()`` — usually via
+        ``handle.stream()`` / ``handle.result()`` — so handles submitted
+        together co-batch."""
+        req = self.engine.enqueue(prompt, params, session=session,
+                                  token_ids=token_ids)
+        h = Handle(self, req)
+        self._handles[req.rid] = h
+        return h
+
+    def cancel(self, handle: Handle) -> bool:
+        """Cancel a queued or running handle: its slot, private KV pages,
+        and radix pins are released immediately; the handle keeps whatever
+        partial text was already decoded."""
+        ok = self.engine.cancel(handle.request)
+        self._deliver()
+        return ok
+
+    # ---- the cooperative pump ----------------------------------------------
+    def step(self) -> bool:
+        """One engine iteration for ALL live requests, then deliver newly
+        decoded text to their handles. Returns True while there is work."""
+        progressed = self.engine.step()
+        self._deliver()
+        return progressed or bool(self.engine._queue)
+
+    def run_until_idle(self):
+        """Drain everything currently queued or running."""
+        while self.step():
+            pass
+
+    def _deliver(self):
+        """Distribute newly decoded (stop-trimmed) text to live handles —
+        the streaming counterpart of the engine's one-host-sync-per-chunk
+        contract: at most one delivery per handle per chunk.
+
+        Increments are decoded from the NEW tokens only (O(chunk), not
+        O(output so far)), holding back a trailing incomplete UTF-8
+        sequence so a multi-byte character split across chunk syncs is
+        delivered whole once its last byte lands — the concatenated stream
+        always equals ``result()``."""
+        eng = self.engine
+        by_rid = {s.request.rid: s for s in eng.slots if s.request is not None}
+        for rid, h in list(self._handles.items()):
+            req = h.request
+            if req.finished:
+                ids = req.output_ids or []
+                tail = eng.tokenizer.decode(ids[h._sent:])
+                h._sent = len(ids)
+                if tail:
+                    h._push(tail)
+                    eng._stream_chunks += 1
+                del self._handles[rid]
+                continue
+            slot = by_rid.get(rid)
+            if slot is None:
+                continue
+            avail = len(slot.generated) - _utf8_holdback(slot.generated)
+            if avail > h._sent:
+                piece = eng.tokenizer.decode(slot.generated[h._sent:avail])
+                h._sent = avail
+                if piece:                       # all-specials chunks skip
+                    h._push(piece)
+                    eng._stream_chunks += 1

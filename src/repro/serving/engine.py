@@ -50,4 +50,8 @@ class ServingEngine(Scheduler):
         req = self.submit(prompt, max_new_tokens=max_new_tokens,
                           temperature=temperature, top_k=top_k)
         self.run_until_drained()
+        if req.status == "failed":
+            # the fault layer dead-letters instead of crashing the pump;
+            # the blocking API surfaces the error to its caller directly
+            raise req.error
         return req.output_text

@@ -47,6 +47,7 @@ class PagePool:
         self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
         self._free_set = set(self._free)
         self.peak_in_use = 0
+        self.injector = None        # chaos hook (serving/faults.FaultInjector)
 
     @property
     def num_free(self) -> int:
@@ -60,6 +61,9 @@ class PagePool:
         """n pages or None (never a partial allocation)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
+        if n > 0 and self.injector is not None and self.injector.take("pool.alloc"):
+            return None             # injected exhaustion: the caller's normal
+                                    # evict-then-retry / backoff path handles it
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
@@ -141,6 +145,7 @@ class SnapshotArena:
         self._free: List[int] = list(range(num_snaps - 1, -1, -1))
         self._free_set = set(self._free)
         self.peak_in_use = 0
+        self.injector = None        # chaos hook (serving/faults.FaultInjector)
 
     @property
     def num_free(self) -> int:
@@ -153,6 +158,8 @@ class SnapshotArena:
     def alloc(self) -> Optional[int]:
         """One slot id, or None when the arena is full (the caller evicts
         from the radix tree and retries, or skips the capture)."""
+        if self.injector is not None and self.injector.take("snap.alloc"):
+            return None             # injected exhaustion: capture is skipped
         if not self._free:
             return None
         sid = self._free.pop()

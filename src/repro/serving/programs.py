@@ -24,11 +24,14 @@ re-tracing.
 """
 from __future__ import annotations
 
+import random
+import time
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.serving.faults import DeadLetterError, RetryPolicy, TransientFault
 from repro.serving.sampler import accept_batched, sample_batched
 
 
@@ -101,7 +104,9 @@ class EnginePrograms:
 
     def __init__(self, model, cfg, engine_cfg, *, capacity: int,
                  num_slots: int, eos_id: int, freeze_done_rows: bool,
-                 snapshots: bool, spec: bool, donate: bool):
+                 snapshots: bool, spec: bool, donate: bool,
+                 injector=None, retry: RetryPolicy = None,
+                 watchdog_s: float = None):
         self.model = model
         self.cfg = cfg
         self.engine_cfg = engine_cfg
@@ -109,26 +114,86 @@ class EnginePrograms:
         self.num_slots = num_slots
         self.eos_id = eos_id
         self.freeze_done_rows = freeze_done_rows
+        # fault layer: every public dispatch goes through _run (injector
+        # hook + bounded retry of TransientFaults + watchdog accounting)
+        self.injector = injector
+        self.retry = retry or RetryPolicy()
+        self.watchdog_s = watchdog_s
+        self.dispatch_retries = 0       # TransientFaults retried
+        self.watchdog_stalls = 0        # dispatches slower than watchdog_s
+        self._retry_rng = random.Random(0)   # backoff jitter (deterministic)
 
         dargs = (1,) if donate else ()
-        self.prefill = jax.jit(self._prefill_fn, donate_argnums=dargs)
-        self.decode_chunk = jax.jit(self._decode_chunk_fn,
-                                    donate_argnums=dargs)
-        self.extend = jax.jit(self._extend_fn, donate_argnums=dargs,
-                              static_argnames=("sample",))
-        self.extend_paged = jax.jit(self._extend_paged_fn,
-                                    donate_argnums=dargs,
-                                    static_argnames=("sample",))
+        self._prefill_jit = jax.jit(self._prefill_fn, donate_argnums=dargs)
+        self._decode_chunk_jit = jax.jit(self._decode_chunk_fn,
+                                         donate_argnums=dargs)
+        self._extend_jit = jax.jit(self._extend_fn, donate_argnums=dargs,
+                                   static_argnames=("sample",))
+        self._extend_paged_jit = jax.jit(self._extend_paged_fn,
+                                         donate_argnums=dargs,
+                                         static_argnames=("sample",))
         if snapshots:
             d0 = (0,) if donate else ()
-            self.snap_capture = jax.jit(self._snap_capture_fn,
-                                        donate_argnums=d0)
-            self.snap_restore = jax.jit(self._snap_restore_fn,
-                                        donate_argnums=d0)
+            self._snap_capture_jit = jax.jit(self._snap_capture_fn,
+                                             donate_argnums=d0)
+            self._snap_restore_jit = jax.jit(self._snap_restore_fn,
+                                             donate_argnums=d0)
         if spec:
             # ONE jit per verify step for every arch: forward + accept +
             # accept-length state rewind (model.verify_commit) fused
-            self.verify = jax.jit(self._verify_fn, donate_argnums=dargs)
+            self._verify_jit = jax.jit(self._verify_fn, donate_argnums=dargs)
+
+    # ---- guarded dispatch --------------------------------------------------
+    def _run(self, site: str, fn, *args, **kwargs):
+        """One guarded device dispatch: the fault-injector hook fires first
+        (it may stall — counted against the watchdog — or raise), then the
+        jit call. ``TransientFault``s retry with exponential backoff +
+        jitter up to ``retry.max_attempts``, then dead-letter; anything else
+        propagates untouched for the scheduler's isolation paths (a real jit
+        exception is never retried — with donation on, the inputs may
+        already be consumed)."""
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                if self.injector is not None:
+                    self.injector.check(site)
+                out = fn(*args, **kwargs)
+            except TransientFault as e:
+                attempt += 1
+                self.dispatch_retries += 1
+                if attempt >= self.retry.max_attempts:
+                    raise DeadLetterError(
+                        f"{site}: {self.retry.max_attempts} attempts "
+                        "exhausted") from e
+                time.sleep(self.retry.delay(attempt, self._retry_rng))
+                continue
+            if (self.watchdog_s is not None
+                    and time.perf_counter() - t0 > self.watchdog_s):
+                self.watchdog_stalls += 1
+            return out
+
+    def prefill(self, *args):
+        return self._run("prefill", self._prefill_jit, *args)
+
+    def extend(self, *args, sample: bool):
+        return self._run("extend", self._extend_jit, *args, sample=sample)
+
+    def extend_paged(self, *args, sample: bool):
+        return self._run("extend_paged", self._extend_paged_jit, *args,
+                         sample=sample)
+
+    def decode_chunk(self, *args):
+        return self._run("decode", self._decode_chunk_jit, *args)
+
+    def verify(self, *args):
+        return self._run("verify", self._verify_jit, *args)
+
+    def snap_capture(self, *args):
+        return self._run("snap_capture", self._snap_capture_jit, *args)
+
+    def snap_restore(self, *args):
+        return self._run("snap_restore", self._snap_restore_jit, *args)
 
     # ---- prefill / extend --------------------------------------------------
     def _prefill_fn(self, params, cache, tokens, positions, slot, length, key,

@@ -53,11 +53,17 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
+import math
+import random
+
 import jax
 import jax.numpy as jnp
 
 from repro.models import Model
 from repro.serving import kvpool
+from repro.serving.faults import (DeadLetterError, DeadlineExceeded,
+                                  RequestFault, RetryPolicy)
+from repro.serving.journal import JournalEntry, SessionJournal
 from repro.serving.programs import EnginePrograms, auto_buckets
 from repro.serving.radix import RadixTree
 from repro.serving.spec import NgramDrafter
@@ -89,6 +95,11 @@ class SamplingParams:
     priority:       admission class; higher admits first, FIFO within a
                     class (radix-aware admission grouping may still pull a
                     prefix-sharing request forward within one engine step).
+    deadline_s:     wall-clock budget from submit; checked at every chunk
+                    sync, so an expired request terminates TIMED_OUT within
+                    one decode chunk of the deadline with all resources
+                    freed (partial output kept, like cancel). None falls
+                    back to the server-level ``default_deadline_s``.
     """
     max_new_tokens: int = 64
     temperature: float = 0.0
@@ -96,6 +107,7 @@ class SamplingParams:
     stop: Tuple[str, ...] = ()
     seed: Optional[int] = None
     priority: int = 0
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,9 +202,16 @@ class Request:
     decode_s: float = 0.0
     latency_s: float = 0.0
     admit_index: int = -1
-    finished: bool = False         # finalized or cancelled
+    finished: bool = False         # reached a terminal status
     cancelled: bool = False
+    status: str = "queued"         # RequestStatus value (serving/faults.py):
+                                   # queued/running -> completed | cancelled
+                                   # | timed_out | failed
+    error: Optional[BaseException] = None    # why FAILED / TIMED_OUT
+    deadline_s: Optional[float] = None       # resolved (param or server default)
     _submit_t: float = 0.0
+    _retry_at: float = 0.0         # admission backoff: skip until this time
+    _admit_attempts: int = 0       # failed admission tries (pool exhaustion)
     _ids: Optional[list] = None    # tokenized prompt, cached across admission
                                    # retries (paged head-of-line waits) and
                                    # pre-built by session turn continuation
@@ -262,8 +281,20 @@ class Scheduler:
 
     def __init__(self, cfg, *, num_slots: int = 4, capacity: int = 512,
                  params=None, seed: int = 0,
-                 engine_cfg: Optional[EngineConfig] = None):
+                 engine_cfg: Optional[EngineConfig] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 default_deadline_s: Optional[float] = None,
+                 injector=None, journal_path: Optional[str] = None,
+                 watchdog_s: Optional[float] = None):
         self.engine_cfg = engine_cfg or EngineConfig()
+        # fault-tolerance layer (serving/faults.py): bounded retry of
+        # transient dispatch faults, deadline default, chaos hooks, and the
+        # crash-safe session journal (serving/journal.py)
+        self.retry = retry or RetryPolicy()
+        self.default_deadline_s = default_deadline_s
+        self.injector = injector
+        self.journal = SessionJournal(journal_path)
+        self._backoff_rng = random.Random(seed ^ 0x5EED)
         if self.engine_cfg.decode_chunk < 1:
             raise ValueError(
                 f"decode_chunk must be >= 1, got {self.engine_cfg.decode_chunk} "
@@ -327,6 +358,7 @@ class Scheduler:
             # structure, batch axis re-purposed as the page axis
             self.cache = kvpool.init_paged_cache(self.cfg, n_pages, ps)
             self.kvpool = kvpool.PagePool(n_pages)
+            self.kvpool.injector = injector
             self.radix = RadixTree(ps)
             self._bt_device = None      # cached decode block table (device)
         else:
@@ -343,6 +375,7 @@ class Scheduler:
             if n_snaps is None:
                 n_snaps = 1 + num_slots * (-(-capacity // (ps * stride)) + 2)
             self.snaps = kvpool.SnapshotArena(n_snaps)
+            self.snaps.injector = injector
             self.snap_arena = self.model.init_cache(n_snaps, capacity)
         else:
             self.snaps = None
@@ -383,6 +416,9 @@ class Scheduler:
         self._stream_chunks = 0                  # bumped by server streaming
         self._steps = 0                          # engine steps with work
         self._active_slot_sum = 0                # co-batching: Σ active slots
+        self._admission_retries = 0              # pool-exhaustion backoffs
+        self._dead_lettered = 0                  # requests terminated FAILED
+        self._timed_out = 0                      # requests terminated TIMED_OUT
 
         donate = self.engine_cfg.donate
         if donate is None:
@@ -391,7 +427,8 @@ class Scheduler:
             self.model, self.cfg, self.engine_cfg, capacity=self.capacity,
             num_slots=num_slots, eos_id=self.tokenizer.eos_id,
             freeze_done_rows=self._freeze_done_rows, snapshots=self.snapshots,
-            spec=self.spec, donate=donate)
+            spec=self.spec, donate=donate, injector=injector,
+            retry=self.retry, watchdog_s=watchdog_s)
         self._zero_key = jnp.zeros((2,), jnp.uint32)
         self._slot_consts = None        # cached (keys, prompt_lens) device
                                         # arrays; rebuilt on membership change
@@ -404,6 +441,8 @@ class Scheduler:
         that conversation (one in-flight turn per session); ``token_ids``
         bypasses tokenization (benchmarks replaying exact streams)."""
         p = params or SamplingParams()
+        # validate at submit time: a poisoned request must raise a clear
+        # ValueError HERE, not fail inside a jit program mid-batch
         if p.max_new_tokens >= self.capacity - 1:
             raise ValueError(
                 f"max_new_tokens={p.max_new_tokens} leaves no room for the "
@@ -412,10 +451,22 @@ class Scheduler:
         if p.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {p.max_new_tokens}")
+        if not (p.temperature >= 0.0) or math.isinf(p.temperature):
+            raise ValueError(
+                f"temperature must be finite and >= 0, got {p.temperature}")
+        if p.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {p.top_k}")
+        if p.deadline_s is not None and not p.deadline_s > 0:
+            raise ValueError(f"deadline_s must be > 0, got {p.deadline_s}")
+        if not prompt and token_ids is None:
+            raise ValueError(
+                "empty prompt (pass token_ids= to replay an exact stream)")
         stop = (p.stop,) if isinstance(p.stop, str) else tuple(p.stop or ())
         self._next_rid += 1
         req = Request(self._next_rid, prompt, p.max_new_tokens, p.temperature,
                       p.top_k, stop=stop, priority=p.priority)
+        req.deadline_s = (p.deadline_s if p.deadline_s is not None
+                          else self.default_deadline_s)
         req._submit_t = time.perf_counter()
         if token_ids is not None:
             req._ids = list(token_ids)
@@ -471,42 +522,84 @@ class Scheduler:
         turns) leaves the session's retained tail intact so the turn can be
         retried. Partial output is kept on the request. Returns False if the
         request already finished."""
+        return self._abort(req, "cancelled")
+
+    def _abort(self, req: Request, status: str,
+               error: Optional[BaseException] = None) -> bool:
+        """Terminate a queued or in-flight request in a non-completed
+        terminal status (cancelled / timed_out / failed), releasing every
+        resource it holds. Deadline expiry and dead-lettering reuse the
+        cancellation path, so the leak invariants cover all three."""
         if req.finished:
             return False
         if req in self._queue:
             self._queue.remove(req)
-            self._finish_cancel(req)
+            self._finish_abort(req, status, error)
             return True
         for si, slot in enumerate(self.slots):
             if slot.request is req:
-                req.output_ids = list(slot.generated)
-                req.output_tokens = len(slot.generated)
-                req.output_text = self.tokenizer.decode(slot.generated)
-                if self.paged:
-                    priv = list(slot.pages_priv)
-                    if slot.sess_tail_page >= 0 and req._sess is not None:
-                        # the tail page's pre-turn positions are untouched
-                        # (this turn only wrote at/after the tail) — hand it
-                        # back so the retried turn can still reuse it
-                        req._sess.tail_page = slot.sess_tail_page
-                        priv.remove(slot.sess_tail_page)
-                    self.kvpool.free(priv)
-                    self.radix.release(slot.node)
-                    self._bt_device = None
-                elif self.snapshots:
-                    self.radix.release(slot.node)
-                self.slots[si] = _Slot()
-                self._finish_cancel(req)
+                self._release_slot(si)
+                self._finish_abort(req, status, error)
                 return True
         return False
 
-    def _finish_cancel(self, req: Request):
-        req.cancelled = True
+    def _release_slot(self, si: int):
+        """Capture slot ``si``'s partial output onto its request and free
+        everything the slot holds (private pages — the session tail page
+        goes back to its session — radix pins). The shared path under
+        cancel, deadline expiry, and failure isolation."""
+        slot = self.slots[si]
+        req = slot.request
+        req.output_ids = list(slot.generated)
+        req.output_tokens = len(slot.generated)
+        req.output_text = self.tokenizer.decode(slot.generated)
+        if self.paged:
+            priv = list(slot.pages_priv)
+            if slot.sess_tail_page >= 0 and req._sess is not None:
+                # the tail page's pre-turn positions are untouched
+                # (this turn only wrote at/after the tail) — hand it
+                # back so the retried turn can still reuse it
+                req._sess.tail_page = slot.sess_tail_page
+                priv.remove(slot.sess_tail_page)
+            self.kvpool.free(priv)
+            self.radix.release(slot.node)
+            self._bt_device = None
+        elif self.snapshots:
+            self.radix.release(slot.node)
+        self.slots[si] = _Slot()
+        self._slot_consts = None
+
+    def _finish_abort(self, req: Request, status: str,
+                      error: Optional[BaseException]):
+        req.status = status
+        req.error = error
+        req.cancelled = status in ("cancelled", "timed_out")
         req.finished = True
         req.latency_s = time.perf_counter() - req._submit_t
-        self._cancelled += 1
+        if status == "cancelled":
+            self._cancelled += 1
+        elif status == "timed_out":
+            self._timed_out += 1
+        elif status == "failed":
+            self._dead_lettered += 1
         if req._sess is not None and req._sess.live is req:
             req._sess.live = None
+
+    # ---- deadlines ---------------------------------------------------------
+    def _expire_deadlines(self):
+        """Terminate queued and in-flight requests whose deadline elapsed.
+        Called at the top of every ``step()`` — i.e. at every chunk sync —
+        so an expired request terminates TIMED_OUT within one chunk of its
+        deadline, with all resources freed."""
+        now = time.perf_counter()
+        expired = [r for r in list(self._queue)
+                   + [s.request for s in self.slots if s.request is not None]
+                   if r.deadline_s is not None
+                   and now >= r._submit_t + r.deadline_s]
+        for req in expired:
+            self._abort(req, "timed_out", DeadlineExceeded(
+                f"rid={req.rid}: deadline_s={req.deadline_s} elapsed "
+                f"after {now - req._submit_t:.3f}s"))
 
     # ---- sessions ----------------------------------------------------------
     def open_session(self) -> int:
@@ -522,6 +615,35 @@ class Scheduler:
         if sess.live is not None and not sess.live.finished:
             self.cancel(sess.live)
         self._session_reset_tail(sess)
+        self.journal.drop(sid)
+
+    def restore_session(self, entry: JournalEntry) -> int:
+        """Rebuild one journaled session on THIS engine after a teardown:
+        opens a fresh session and replays the journaled token stream through
+        the normal ``enqueue(token_ids=)`` path — re-prefilling
+        ``all_tokens[:-1]`` (the processed prefix) and letting finalize
+        re-capture the tail page / tail snapshot at the exact
+        end-of-generation boundary, so the next turn's greedy output is
+        bit-identical to an uninterrupted server. Dense mode retains no
+        device tail; only the token-level bookkeeping is restored (the next
+        turn re-prefills, which is already its steady state). Returns the
+        new session id."""
+        sid = self.open_session()
+        sess = self._sessions[sid]
+        toks = list(entry.all_tokens)
+        if len(toks) >= 2 and (self.paged or self.snapshots):
+            req = self.enqueue("", SamplingParams(max_new_tokens=1),
+                               session=sid, token_ids=toks[:-1])
+            while not req.finished:
+                self.step()
+        # the replay's sampled continuation token re-derives greedily; pin
+        # the journaled stream + text regardless (a temperature turn's
+        # sampled token is not part of the processed tail state)
+        sess.all_tokens = toks
+        sess.text = entry.text
+        sess.turns = entry.turns
+        self.journal.record(sid, sess.text, sess.all_tokens, sess.turns)
+        return sid
 
     def _session_reset_tail(self, sess: _SessionState):
         """Release everything a session retains between turns."""
@@ -597,6 +719,16 @@ class Scheduler:
             "session_turns": self._session_turns,
             "turn_prefix_hits": self._turn_prefix_hits,
             "cancelled_requests": self._cancelled,
+            # fault-tolerance counters (serving/faults.py): admission
+            # backoffs under pool pressure, requests terminated FAILED /
+            # TIMED_OUT, transient dispatch faults retried away, watchdog-
+            # flagged slow dispatches, and journaled (recoverable) sessions
+            "admission_retries": self._admission_retries,
+            "dead_lettered": self._dead_lettered,
+            "timed_out": self._timed_out,
+            "dispatch_retries": self.progs.dispatch_retries,
+            "watchdog_stalls": self.progs.watchdog_stalls,
+            "journaled_sessions": len(self.journal),
             "stream_chunks": self._stream_chunks,
             "engine_steps": self._steps,
             "active_slots_per_step": self._active_slot_sum /
@@ -745,13 +877,20 @@ class Scheduler:
         slot.prompt_len = len(ids)
         slot.remaining = req.max_new_tokens - 1
         slot.generated = [int(first)]                     # one host sync
+        req.status = "running"
         self._arm_spec(slot, ids)
         self._slot_consts = None        # slot membership changed
         self._prefill_syncs += 1
 
     def _admit_dense(self, si: int, slot: _Slot, req: Request):
         ids = self._encode_prompt(req)
-        first = self._prefill_span(si, req, ids, 0, len(ids), sample=True)
+        try:
+            first = self._prefill_span(si, req, ids, 0, len(ids), sample=True)
+        except Exception:
+            # failure isolation: nothing allocated yet — the partially
+            # written cache row is fully overwritten by the next admission
+            self._uncount_prompt(req, ids)
+            raise
         self._activate(si, slot, req, ids, first)
         slot.token_ids = ids        # sessions track the exact token stream
                                     # (dense mode reuses nothing, but turn
@@ -779,6 +918,16 @@ class Scheduler:
         prefix_len = tail_len if use_tail else len(shared) * ps
         total_pages = -(-min(len(ids) + req.max_new_tokens + 1,
                              self.capacity) // ps)
+        if total_pages > self.kvpool.num_pages - self.kvpool.reserved:
+            # can NEVER fit, even with every page free: dead-letter instead
+            # of spinning the admission loop (or crashing the pump)
+            self.radix.release(node)
+            self._uncount_prompt(req, ids)
+            raise RequestFault(
+                f"paged KV pool too small: request rid={req.rid} needs "
+                f"{total_pages} pages but the pool can ever free at most "
+                f"{self.kvpool.num_pages - self.kvpool.reserved} "
+                f"(num_pages={self.kvpool.num_pages}, page_size={ps})")
         n_have = len(shared) + (1 if use_tail else 0)
         priv = self.kvpool.alloc(total_pages - n_have)
         if priv is None:
@@ -798,7 +947,8 @@ class Scheduler:
             slot.sess_tail_page = sess.tail_page
             priv = [sess.tail_page] + priv
             sess.tail_page = -1
-        if tail_len and prefix_len >= tail_len:
+        hit_turn = bool(tail_len and prefix_len >= tail_len)
+        if hit_turn:
             # the whole retained conversation was served from reuse — the
             # session tail, or a radix path another request drove deeper
             self._turn_prefix_hits += 1
@@ -807,27 +957,45 @@ class Scheduler:
         bt = kvpool.block_table_array([shared + priv], self._bt_width)
         first = None
         plan = self._chunk_plan(len(ids) - prefix_len, prefix_len)
-        for ci, (off, real, padded) in enumerate(plan):
-            start = prefix_len + off
-            tokens, positions = self._chunk_batch(
-                ids[start:start + real], start, padded)
-            self._pad_tokens += padded - real
-            self._extend_shapes.add((padded, self.cfg.modality))
-            self._extend_chunks += 1
-            self.cache, tok = self.progs.extend_paged(
-                self.params, self.cache, tokens, positions, bt,
-                jnp.int32(start), jnp.int32(real), req._key0,
-                jnp.float32(req.temperature), jnp.int32(req.top_k),
-                sample=ci == len(plan) - 1)
-            if ci == len(plan) - 1:
-                first = tok
+        try:
+            for ci, (off, real, padded) in enumerate(plan):
+                start = prefix_len + off
+                tokens, positions = self._chunk_batch(
+                    ids[start:start + real], start, padded)
+                self._pad_tokens += padded - real
+                self._extend_shapes.add((padded, self.cfg.modality))
+                self._extend_chunks += 1
+                self.cache, tok = self.progs.extend_paged(
+                    self.params, self.cache, tokens, positions, bt,
+                    jnp.int32(start), jnp.int32(real), req._key0,
+                    jnp.float32(req.temperature), jnp.int32(req.top_k),
+                    sample=ci == len(plan) - 1)
+                if ci == len(plan) - 1:
+                    first = tok
+        except Exception:
+            # failure isolation: this request never activated — give the
+            # tail page back to its session, return every reserved page,
+            # unpin the trie, and roll the admission counters back so the
+            # exactly-once ownership invariant holds on the fault path too
+            if slot.sess_tail_page >= 0:
+                sess.tail_page = slot.sess_tail_page
+                priv.remove(slot.sess_tail_page)
+                slot.sess_tail_page = -1
+            self.kvpool.free(priv)
+            self.radix.release(node)
+            if hit_turn:
+                self._turn_prefix_hits -= 1
+            self._prefix_hit_tokens -= prefix_len
+            req.prefix_hit_tokens = 0
+            self._uncount_prompt(req, ids)
+            raise
         self._activate(si, slot, req, ids, first)
         slot.token_ids = ids
         slot.pages_shared = shared
         slot.pages_priv = priv
         slot.node = node
         self._bt_device = None          # slot membership changed
-        self._group_queue(ids)
+        self._group_queue(ids, req)
         return True
 
     def _capture_snapshot(self, si: int) -> int:
@@ -841,9 +1009,14 @@ class Scheduler:
             sid = self.snaps.alloc()
         if sid is None:
             return -1
-        self.snap_arena = self.progs.snap_capture(self.snap_arena, self.cache,
-                                                  jnp.int32(sid),
-                                                  jnp.int32(si))
+        try:
+            self.snap_arena = self.progs.snap_capture(self.snap_arena,
+                                                      self.cache,
+                                                      jnp.int32(sid),
+                                                      jnp.int32(si))
+        except Exception:
+            self.snaps.free([sid])      # exactly-once: reclaim the fresh row
+            raise
         self._snap_captures += 1
         return sid
 
@@ -864,46 +1037,58 @@ class Scheduler:
         # always recompute at least the last prompt token (its logits seed
         # the first sampled token), so cap the usable match one token short
         _, node = self.radix.match(ids[:len(ids) - 1])
-        sid, sblocks = self.radix.nearest_snapshot(node)
-        restore = sblocks * ps
-        tail_len = self._tail_usable(req, ids)
-        if tail_len > restore and sess.tail_snap >= 0:
-            # session tail beats the deepest block-aligned trie snapshot
-            self.cache = self.progs.snap_restore(self.cache, self.snap_arena,
-                                                 jnp.int32(sess.tail_snap),
-                                                 jnp.int32(si))
-            restore = tail_len
-            self._snap_hits += 1
-        elif sid >= 0:
-            self.cache = self.progs.snap_restore(self.cache, self.snap_arena,
-                                                 jnp.int32(sid), jnp.int32(si))
-            self._snap_hits += 1
-        else:
-            self._snap_misses += 1
-        if tail_len and restore >= tail_len:
-            self._turn_prefix_hits += 1
-        req.prefix_hit_tokens = restore
-        self._prefix_hit_tokens += restore
-        stride = ps * max(1, self.engine_cfg.snap_stride)
-        bounds = set(range((restore // stride + 1) * stride,
-                           len(ids) + 1, stride))
         new_snaps = {}
-        pos, first = restore, None
-        for end in sorted(bounds | {len(ids)}):
-            first = self._prefill_span(si, req, ids, pos, end,
-                                       sample=end == len(ids))
-            if end in bounds:
-                s = self._capture_snapshot(si)
-                if s >= 0:
-                    new_snaps[end // ps] = s
-            pos = end
-        if new_snaps:
-            hi = max(new_snaps) * ps
-            self.snaps.free(self.radix.insert_snaps(ids[:hi], new_snaps))
+        try:
+            sid, sblocks = self.radix.nearest_snapshot(node)
+            restore = sblocks * ps
+            tail_len = self._tail_usable(req, ids)
+            if tail_len > restore and sess.tail_snap >= 0:
+                # session tail beats the deepest block-aligned trie snapshot
+                self.cache = self.progs.snap_restore(
+                    self.cache, self.snap_arena, jnp.int32(sess.tail_snap),
+                    jnp.int32(si))
+                restore = tail_len
+                self._snap_hits += 1
+            elif sid >= 0:
+                self.cache = self.progs.snap_restore(
+                    self.cache, self.snap_arena, jnp.int32(sid),
+                    jnp.int32(si))
+                self._snap_hits += 1
+            else:
+                self._snap_misses += 1
+            if tail_len and restore >= tail_len:
+                self._turn_prefix_hits += 1
+            req.prefix_hit_tokens = restore
+            self._prefix_hit_tokens += restore
+            stride = ps * max(1, self.engine_cfg.snap_stride)
+            bounds = set(range((restore // stride + 1) * stride,
+                               len(ids) + 1, stride))
+            pos, first = restore, None
+            for end in sorted(bounds | {len(ids)}):
+                first = self._prefill_span(si, req, ids, pos, end,
+                                           sample=end == len(ids))
+                if end in bounds:
+                    s = self._capture_snapshot(si)
+                    if s >= 0:
+                        new_snaps[end // ps] = s
+                pos = end
+            if new_snaps:
+                hi = max(new_snaps) * ps
+                self.snaps.free(self.radix.insert_snaps(ids[:hi], new_snaps))
+        except Exception:
+            # failure isolation: unpin the trie, return captured-but-not-
+            # yet-inserted snapshots to the arena, roll back the counters —
+            # exactly-once snapshot ownership holds on the fault path too
+            self.radix.release(node)
+            self.snaps.free(list(new_snaps.values()))
+            self._prefix_hit_tokens -= req.prefix_hit_tokens
+            req.prefix_hit_tokens = 0
+            self._uncount_prompt(req, ids)
+            raise
         self._activate(si, slot, req, ids, first)
         slot.token_ids = ids
         slot.node = node
-        self._group_queue(ids)
+        self._group_queue(ids, req)
         return True
 
     def _arm_spec(self, slot: _Slot, ids: List[int]):
@@ -916,7 +1101,7 @@ class Scheduler:
                                     n_max=self.engine_cfg.spec_ngram_max)
         slot.spec_on = True
 
-    def _group_queue(self, ids: List[int]):
+    def _group_queue(self, ids: List[int], req: Request):
         """Radix-aware admission batching (paged): stable-move queued
         requests whose (truncated) prompt shares the just-admitted prompt's
         first radix block to the queue front, so the remaining free slots of
@@ -926,12 +1111,14 @@ class Scheduler:
         remainder (a grouped request may jump a higher priority class for
         this one step — the shared-prefix locality win is worth it)."""
         ps = self.engine_cfg.page_size
-        # queue[0] is the request being admitted right now — skip it
-        if len(ids) < ps or len(self._queue) < 2:
+        # ``req`` is the request being admitted right now (still queued until
+        # _admit removes it; with admission backoff it need not be the head)
+        others = [r for r in self._queue if r is not req]
+        if len(ids) < ps or not others:
             return
         head = tuple(ids[:ps])
         grouped, rest = [], []
-        for r in list(self._queue)[1:]:
+        for r in others:
             if r._ids is None:
                 r._ids = self.tokenizer.encode(r.prompt)
             rids = r._ids[-(self.capacity - r.max_new_tokens - 1):]
@@ -941,41 +1128,81 @@ class Scheduler:
             else:
                 rest.append(r)
         if grouped:
-            self._queue = collections.deque(
-                [self._queue[0]] + grouped + rest)
+            self._queue = collections.deque([req] + grouped + rest)
+
+    def _next_admittable(self, now: float) -> Optional[Request]:
+        """First queued request not sitting out an admission backoff —
+        priority/FIFO order is the queue order, so the head-of-line request
+        still admits first whenever it is eligible."""
+        for r in self._queue:
+            if r._retry_at <= now:
+                return r
+        return None
 
     def _admit(self):
         """Prefill queued requests into free slots (continuous batching).
 
-        Paged mode admits FIFO within priority classes: if the pool can't
-        cover the head request the whole admission round stops (no smaller
-        request jumps the line), and the head retries next step once decode
-        frees pages.
+        Admission is FIFO within priority classes, with two fault-layer
+        behaviours (serving/faults.py):
+
+        * **backoff + starvation guard**: when the paged pool can't cover a
+          request even after LRU eviction, the request backs off
+          (exponential + jitter per ``RetryPolicy``) instead of blocking the
+          whole round — the next admittable candidate gets a shot at the
+          slot, so a burst of small requests keeps flowing around a large
+          head-of-line request. The backed-off request keeps its queue
+          position and admits first again the moment its backoff elapses.
+        * **dead-lettering**: a request whose admission *faults* (injected
+          ``RequestFault``, a page demand the pool can never satisfy, or —
+          with nothing active to ever free pages — retries exhausted) is
+          terminated FAILED with the error on the request, instead of
+          crashing the engine pump.
         """
+        admit = (self._admit_paged if self.paged else
+                 self._admit_snap if self.snapshots else
+                 self._admit_dense)
         for si, slot in enumerate(self.slots):
-            if slot.request is not None or not self._queue:
+            if slot.request is not None:
                 continue
-            req = self._queue[0]
-            t0 = time.perf_counter()
-            admit = (self._admit_paged if self.paged else
-                     self._admit_snap if self.snapshots else
-                     self._admit_dense)
-            admitted = admit(si, slot, req)
-            if not admitted:
-                if not self._active():
-                    raise RuntimeError(
-                        f"paged KV pool too small: request rid={req.rid} "
-                        f"needs more pages than the pool can ever free "
-                        f"(num_pages={self.kvpool.num_pages}, "
-                        f"page_size={self.engine_cfg.page_size})")
+            while True:          # candidates until one admits or none left
+                now = time.perf_counter()
+                req = self._next_admittable(now)
+                if req is None:
+                    break
+                t0 = time.perf_counter()
+                try:
+                    admitted = admit(si, slot, req)
+                except (RequestFault, DeadLetterError) as e:
+                    # failure isolation: only this request dies; the slot
+                    # is still free for the next candidate
+                    self._queue.remove(req)
+                    self._finish_abort(req, "failed", e)
+                    continue
+                if not admitted:
+                    req._admit_attempts += 1
+                    self._admission_retries += 1
+                    if (req._admit_attempts >= self.retry.max_attempts
+                            and not self._active()):
+                        # nothing running will ever free pages for it:
+                        # waiting longer cannot help — dead-letter
+                        self._queue.remove(req)
+                        self._finish_abort(req, "failed", DeadLetterError(
+                            f"rid={req.rid}: admission failed "
+                            f"{req._admit_attempts} times with no active "
+                            f"requests to free pool capacity"))
+                        continue
+                    req._retry_at = now + self.retry.delay(
+                        req._admit_attempts, self._backoff_rng)
+                    continue
+                self._queue.remove(req)
+                if req._grouped:
+                    self._grouped_admissions += 1
+                    req._grouped = False
+                req._admit_attempts = 0
+                req.admit_index = self._next_admit
+                self._next_admit += 1
+                req.prefill_s += time.perf_counter() - t0
                 break
-            self._queue.popleft()
-            if req._grouped:
-                self._grouped_admissions += 1
-                req._grouped = False
-            req.admit_index = self._next_admit
-            self._next_admit += 1
-            req.prefill_s += time.perf_counter() - t0
         # grouping credit is same-step only: a sharer still queued when the
         # round ends admits later on its own (the pinned pages may be gone)
         for r in self._queue:
@@ -1060,7 +1287,16 @@ class Scheduler:
             # at its exact (non-block-aligned) length into a session-owned
             # arena row — the trie can't index it, the session can
             if sess is not None and not req.cancelled:
-                new_snap = -1 if slot.stopped else self._capture_snapshot(si)
+                if slot.stopped:
+                    new_snap = -1
+                else:
+                    try:
+                        new_snap = self._capture_snapshot(si)
+                    except Exception:
+                        # a faulted tail capture degrades to a skipped one
+                        # (pure optimization: the next turn re-prefills) —
+                        # it must not crash the pump at finalize
+                        new_snap = -1
                 if sess.tail_snap >= 0:
                     self.snaps.free([sess.tail_snap])
                 sess.tail_snap = new_snap
@@ -1081,6 +1317,11 @@ class Scheduler:
             sess.text = req.prompt + req.output_text
             if sess.live is req:
                 sess.live = None
+            # crash-safe journal: the token-level state a fresh server needs
+            # to rebuild this session's tail (restore_session)
+            self.journal.record(sess.sid, sess.text, sess.all_tokens,
+                                sess.turns)
+        req.status = "completed"
         req.finished = True
         self.slots[si] = _Slot()
 
@@ -1120,7 +1361,12 @@ class Scheduler:
             return set()
         # only drafted slots verify; the rest keep the chunked decode loop
         # (a disabled or draftless slot must not degrade to one-token steps)
-        self._spec_step_batched(drafted, drafts)
+        try:
+            self._spec_step_batched(drafted, drafts)
+        except Exception as e:
+            # failure isolation: only the drafted slots die; undrafted
+            # co-batched slots still run their decode chunk this step
+            self._fail_slots(drafted, e)
         return set(drafted)
 
     def _spec_step_batched(self, live, drafts):
@@ -1216,13 +1462,35 @@ class Scheduler:
                  for s in self.slots], self._bt_width)
         return self._bt_device
 
+    def _fail_slots(self, indices, exc: BaseException):
+        """Failure isolation: terminate the requests in these slots FAILED,
+        freeing everything they hold; co-batched requests in other slots are
+        untouched. Injected faults raise *before* dispatch (programs._run),
+        so the shared cache was not consumed and the survivors' state is
+        exactly what it was before the faulted call."""
+        for si in indices:
+            if self.slots[si].request is None:
+                continue
+            req = self.slots[si].request
+            self._release_slot(si)
+            self._finish_abort(req, "failed", exc)
+
     def step(self):
-        """One engine iteration: admit, then one speculative verify pass for
-        slots with drafts (when spec is on) and/or one chunked decode for
-        the rest."""
+        """One engine iteration: expire deadlines, admit, then one
+        speculative verify pass for slots with drafts (when spec is on)
+        and/or one chunked decode for the rest."""
+        self._expire_deadlines()
         self._admit()
         active = self._active()
         if not active:
+            if self._queue:
+                # every queued request is in admission backoff: sleep until
+                # the earliest retry so run_until_drained / pump loops don't
+                # hot-spin the admission path
+                wait = (min(r._retry_at for r in self._queue)
+                        - time.perf_counter())
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
             return False
         # co-batching telemetry: how many requests actually share this step
         self._steps += 1
@@ -1270,12 +1538,20 @@ class Scheduler:
         keys, plens = self._slot_consts
         bt = self._decode_block_tables()
 
-        self.cache, tok_buf, emit_buf, clens, rem, done = \
-            self.progs.decode_chunk(self.params, self.cache, last, clens, rem,
-                                    done, temps, top_ks, keys, plens, bt)
-        # the ONE host sync of the chunk: pull tokens + masks + slot state
-        tok_buf, emit_buf, clens_h, rem_h, done_h = jax.device_get(
-            (tok_buf, emit_buf, clens, rem, done))
+        try:
+            self.cache, tok_buf, emit_buf, clens, rem, done = \
+                self.progs.decode_chunk(self.params, self.cache, last, clens,
+                                        rem, done, temps, top_ks, keys, plens,
+                                        bt)
+            # the ONE host sync of the chunk: pull tokens + masks + slot state
+            tok_buf, emit_buf, clens_h, rem_h, done_h = jax.device_get(
+                (tok_buf, emit_buf, clens, rem, done))
+        except Exception as e:
+            # failure isolation: a dead-lettered decode dispatch (retries
+            # exhausted / injected corruption) fails only the slots in this
+            # chunk — queued requests and the next step's admissions go on
+            self._fail_slots(rest, e)
+            return True
         self._decode_syncs += 1
         self._decode_chunks += 1
         dt = time.perf_counter() - t0

@@ -35,12 +35,20 @@ mechanics and docs/serving.md for the full reference.
 from __future__ import annotations
 
 import collections
-from typing import Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Union
 
+from repro.serving.faults import (CorruptionError, DeadLetterError,
+                                  DeadlineExceeded, FaultError, FaultInjector,
+                                  RequestFault, RequestStatus, RetryPolicy,
+                                  TransientFault)
+from repro.serving.journal import SessionJournal
 from repro.serving.scheduler import (EngineConfig, Request, SamplingParams,
                                      Scheduler)
 
-__all__ = ["LLMServer", "Session", "Handle", "SamplingParams", "EngineConfig"]
+__all__ = ["LLMServer", "Session", "Handle", "SamplingParams", "EngineConfig",
+           "RequestStatus", "RetryPolicy", "FaultInjector", "SessionJournal",
+           "FaultError", "TransientFault", "RequestFault", "CorruptionError",
+           "DeadlineExceeded", "DeadLetterError"]
 
 
 def _utf8_holdback(ids: List[int]) -> int:
@@ -64,9 +72,12 @@ def _utf8_holdback(ids: List[int]) -> int:
 class Handle:
     """One in-flight (or finished) request.
 
-    ``status`` is one of ``"queued"`` / ``"running"`` / ``"done"`` /
-    ``"cancelled"``. ``text`` is everything streamed so far; after
-    completion it equals ``result()`` (stop-trimmed).
+    ``status()`` is a ``RequestStatus`` (serving/faults.py): ``QUEUED`` or
+    ``RUNNING`` while live, then exactly one terminal state — ``COMPLETED``,
+    ``CANCELLED``, ``TIMED_OUT`` (deadline elapsed), or ``FAILED``
+    (dead-lettered after a non-transient fault; ``exception()`` has the
+    error). ``text`` is everything streamed so far; after completion it
+    equals ``result()`` (stop-trimmed).
     """
 
     def __init__(self, server: "LLMServer", request: Request):
@@ -76,13 +87,13 @@ class Handle:
         self._pending: "collections.deque[str]" = collections.deque()
         self._sent = 0                  # generated tokens already delivered
 
-    @property
-    def status(self) -> str:
-        if self.request.cancelled:
-            return "cancelled"
-        if self.request.finished:
-            return "done"
-        return "running" if self.request.admit_index >= 0 else "queued"
+    def status(self) -> RequestStatus:
+        return RequestStatus(self.request.status)
+
+    def exception(self) -> Optional[BaseException]:
+        """The error that terminated this request (``FAILED`` /
+        ``TIMED_OUT``), else None."""
+        return self.request.error
 
     @property
     def done(self) -> bool:
@@ -102,9 +113,13 @@ class Handle:
 
     def result(self) -> str:
         """Block (cooperatively) until the request finishes; returns the
-        full output text. A cancelled handle returns its partial output."""
+        full output text. A cancelled or timed-out handle returns its
+        partial output (the deadline is a budget, not an error; the cause
+        stays on ``exception()``). A FAILED handle re-raises its error."""
         for _ in self.stream():
             pass
+        if self.request.status == "failed":
+            raise self.request.error
         return self.request.output_text
 
     def cancel(self) -> bool:
@@ -169,10 +184,18 @@ class LLMServer:
 
     def __init__(self, cfg, *, num_slots: int = 4, capacity: int = 512,
                  params=None, seed: int = 0,
-                 engine_cfg: Optional[EngineConfig] = None):
+                 engine_cfg: Optional[EngineConfig] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 default_deadline_s: Optional[float] = None,
+                 injector: Optional[FaultInjector] = None,
+                 journal_path: Optional[str] = None,
+                 watchdog_s: Optional[float] = None):
         self.engine = Scheduler(cfg, num_slots=num_slots, capacity=capacity,
                                 params=params, seed=seed,
-                                engine_cfg=engine_cfg)
+                                engine_cfg=engine_cfg, retry=retry,
+                                default_deadline_s=default_deadline_s,
+                                injector=injector, journal_path=journal_path,
+                                watchdog_s=watchdog_s)
         self._handles: "dict[int, Handle]" = {}       # rid -> live handle
 
     # convenient passthroughs
@@ -187,9 +210,33 @@ class LLMServer:
     def stats(self) -> dict:
         return self.engine.stats()
 
+    @property
+    def journal(self) -> SessionJournal:
+        """The crash-safe session journal (serving/journal.py). Pass
+        ``journal_path=`` at construction to spill it to JSON after every
+        turn; feed it (or its path) to a fresh server's
+        ``restore_sessions()`` after a crash."""
+        return self.engine.journal
+
     # ---- sessions / submission ---------------------------------------------
     def open_session(self) -> Session:
         return Session(self, self.engine.open_session())
+
+    def restore_sessions(self, journal: Union[SessionJournal, str]
+                         ) -> Dict[int, Session]:
+        """Rebuild every session in ``journal`` (a ``SessionJournal`` or a
+        path to a spilled JSON file) on this server: each journaled token
+        stream is replayed through the normal prefill path, re-creating the
+        retained tail state at its exact end-of-generation boundary — the
+        next turn's greedy output is bit-identical to an uninterrupted
+        server. Returns {old session id -> new live Session}."""
+        if isinstance(journal, str):
+            journal = SessionJournal.load(journal)
+        restored: Dict[int, Session] = {}
+        for entry in journal.entries():
+            sid = self.engine.restore_session(entry)
+            restored[entry.sid] = Session(self, sid)
+        return restored
 
     def submit(self, prompt: str, params: Optional[SamplingParams] = None,
                *, session: Optional[int] = None,

@@ -66,6 +66,10 @@ class NgramDrafter:
         suffix and looked up again until ``max_len`` is reached or the chain
         breaks.
         """
+        if max_len <= 0:
+            # a clamped draft budget (tight remaining/capacity window) must
+            # not index with an empty suffix below
+            return []
         out: List[int] = []
         tail = list(self.toks[-self.n_max:])
         while len(out) < max_len:

@@ -1,0 +1,459 @@
+"""Chaos / fault-injection suite for the serving fault layer
+(serving/faults.py): transient-fault retry, per-request failure isolation,
+dead-lettering, admission backoff under pool exhaustion, corruption
+handling, the stall watchdog, crash-safe session recovery — and the two
+load-bearing invariants under random fault schedules:
+
+* **exactly-once ownership**: after every drain, each KV page / state
+  snapshot is owned by exactly one of free list, radix tree, or a session
+  tail — no leak, no double-free, whatever faults fired mid-flight.
+* **fault-free isolation**: a request none of whose own dispatches faulted
+  completes bit-identically to a fault-free server, even when co-batched
+  requests failed, retried, or backed off around it.
+
+Faults are injected *before* device dispatch (see faults.py), so a retried
+call re-runs bit-identically and the surviving slots' device state is
+untouched by a faulted call.
+"""
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.serving.scheduler import SamplingParams
+from repro.serving.server import (CorruptionError, DeadLetterError,
+                                  EngineConfig, FaultInjector, LLMServer,
+                                  RequestFault, RequestStatus, RetryPolicy,
+                                  SessionJournal)
+
+from tests._hypothesis_compat import given, settings, st
+
+
+def _cfg(arch):
+    return ARCHS[arch].reduced(dtype="float32", param_dtype="float32",
+                               vocab_size=512)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    return _cfg("qwen2.5-3b")
+
+
+@pytest.fixture(scope="module")
+def qwen_params(qwen):
+    from repro.models import Model
+    import jax
+    return Model(qwen).init(jax.random.PRNGKey(0))
+
+
+def _page_leak_check(srv):
+    """Exactly-once page ownership: free list | radix tree | session tail."""
+    eng = srv.engine
+    assert all(s.request is None for s in eng.slots)
+    owned = eng.radix.check_invariants()
+    free = set(eng.kvpool._free)
+    tails = {s.tail_page for s in eng._sessions.values() if s.tail_page >= 0}
+    assert not (owned & free) and not (owned & tails) and not (free & tails)
+    assert (len(owned) + len(free) + len(tails)
+            == eng.kvpool.num_pages - eng.kvpool.reserved)
+
+
+def _snap_leak_check(srv):
+    """Exactly-once snapshot ownership: free list | radix | session tail."""
+    eng = srv.engine
+    assert all(s.request is None for s in eng.slots)
+    owned = eng.radix.check_invariants(snapshots=True)
+    free = set(eng.snaps._free)
+    tails = {s.tail_snap for s in eng._sessions.values() if s.tail_snap >= 0}
+    assert not (owned & free) and not (owned & tails) and not (free & tails)
+    assert len(owned) + len(free) + len(tails) == eng.snaps.num_snaps
+
+
+# ---------------------------------------------------------------------------
+# transient faults: bounded retry, bit-identical recovery
+# ---------------------------------------------------------------------------
+
+
+def test_transient_fault_retried_bit_identical(qwen, qwen_params):
+    """Injected transient faults at prefill and decode are retried away;
+    the output is bit-identical to a fault-free run and the handle
+    COMPLETED."""
+    ref = LLMServer(qwen, num_slots=2, capacity=96, params=qwen_params)
+    want = ref.submit("the quick brown fox",
+                      SamplingParams(max_new_tokens=10)).result()
+    inj = FaultInjector(seed=0)
+    srv = LLMServer(qwen, num_slots=2, capacity=96, params=qwen_params,
+                    injector=inj,
+                    retry=RetryPolicy(max_attempts=3, backoff_s=1e-3))
+    inj.fail_next("prefill", 1)
+    inj.fail_next("decode", 2)
+    h = srv.submit("the quick brown fox", SamplingParams(max_new_tokens=10))
+    assert h.result() == want
+    assert h.status() == RequestStatus.COMPLETED
+    st = srv.stats()
+    assert st["dispatch_retries"] >= 3
+    assert st["dead_lettered"] == 0
+    assert inj.injected["prefill"] == 1 and inj.injected["decode"] == 2
+
+
+def test_request_fault_isolated_to_one_handle(qwen, qwen_params):
+    """A RequestFault at admission fails ONLY the poisoned handle; a
+    co-batched fault-free request completes bit-identically to a fault-free
+    server, and no page leaks."""
+    ecfg = EngineConfig(cache_mode="paged", page_size=16)
+    ref = LLMServer(qwen, num_slots=2, capacity=96, params=qwen_params,
+                    engine_cfg=ecfg)
+    want = ref.submit("survivor prompt",
+                      SamplingParams(max_new_tokens=10)).result()
+    inj = FaultInjector(seed=0)
+    srv = LLMServer(qwen, num_slots=2, capacity=96, params=qwen_params,
+                    engine_cfg=ecfg, injector=inj)
+    inj.fail_next("extend_paged", 1, exc=RequestFault, msg="poisoned request")
+    bad = srv.submit("poisoned prompt", SamplingParams(max_new_tokens=10))
+    good = srv.submit("survivor prompt", SamplingParams(max_new_tokens=10))
+    assert good.result() == want
+    assert good.status() == RequestStatus.COMPLETED
+    assert bad.status() == RequestStatus.FAILED
+    assert isinstance(bad.exception(), RequestFault)
+    with pytest.raises(RequestFault):
+        bad.result()
+    _page_leak_check(srv)
+
+
+def test_decode_deadletter_terminal_and_pump_survives(qwen, qwen_params):
+    """Retries exhausted on a decode chunk dead-letter the slots in that
+    chunk (terminal FAILED, exception recorded) — and the engine pump keeps
+    serving new requests afterwards."""
+    inj = FaultInjector(seed=0)
+    srv = LLMServer(qwen, num_slots=2, capacity=96, params=qwen_params,
+                    engine_cfg=EngineConfig(cache_mode="paged", page_size=16),
+                    injector=inj,
+                    retry=RetryPolicy(max_attempts=2, backoff_s=1e-3))
+    a = srv.submit("request a text", SamplingParams(max_new_tokens=12))
+    b = srv.submit("request b text", SamplingParams(max_new_tokens=12))
+    inj.fail_next("decode", 2)              # both attempts of one chunk
+    srv.run_until_idle()
+    for h in (a, b):
+        assert h.status() == RequestStatus.FAILED and h.status().terminal
+        assert isinstance(h.exception(), DeadLetterError)
+    assert srv.stats()["dead_lettered"] == 2
+    c = srv.submit("still serving", SamplingParams(max_new_tokens=4))
+    assert c.result() is not None and c.status() == RequestStatus.COMPLETED
+    _page_leak_check(srv)
+
+
+# ---------------------------------------------------------------------------
+# admission under pool exhaustion: backoff, starvation guard, never-fit
+# ---------------------------------------------------------------------------
+
+
+def test_pool_exhaustion_backoff_and_starvation_guard(qwen, qwen_params):
+    """Injected pool exhaustion makes the head-of-line request back off
+    instead of blocking the round: a later small request admits first
+    (starvation guard), the denied ones retry with backoff, and everyone
+    completes."""
+    inj = FaultInjector(seed=0)
+    srv = LLMServer(qwen, num_slots=2, capacity=128, params=qwen_params,
+                    engine_cfg=EngineConfig(cache_mode="paged", page_size=16),
+                    injector=inj,
+                    retry=RetryPolicy(max_attempts=8, backoff_s=5e-3))
+    inj.exhaust_next("pool.alloc", 3)
+    big = srv.submit("big request " * 8, SamplingParams(max_new_tokens=32))
+    smalls = [srv.submit(f"small {i}", SamplingParams(max_new_tokens=4))
+              for i in range(3)]
+    srv.run_until_idle()
+    for h in [big] + smalls:
+        assert h.status() == RequestStatus.COMPLETED
+    st = srv.stats()
+    assert st["admission_retries"] >= 1
+    assert st["dead_lettered"] == 0
+    # FIFO says big admits first; the denials made a small overtake it
+    assert min(h.request.admit_index for h in smalls) < big.request.admit_index
+    _page_leak_check(srv)
+
+
+def test_never_fit_dead_letters_without_crashing(qwen, qwen_params):
+    """A request that can never fit the pool (even fully drained) is
+    dead-lettered with a clear error instead of crashing or spinning the
+    pump; the engine keeps serving."""
+    srv = LLMServer(qwen, num_slots=1, capacity=64, params=qwen_params,
+                    engine_cfg=EngineConfig(cache_mode="paged", page_size=16,
+                                            num_pages=3))
+    h = srv.submit("a prompt that needs more pages than the pool holds",
+                   SamplingParams(max_new_tokens=8))
+    with pytest.raises(RequestFault):
+        h.result()
+    assert h.status() == RequestStatus.FAILED
+    assert "pool too small" in str(h.exception())
+    h2 = srv.submit("ok", SamplingParams(max_new_tokens=2))
+    assert h2.result() is not None
+    assert h2.status() == RequestStatus.COMPLETED
+    _page_leak_check(srv)
+
+
+# ---------------------------------------------------------------------------
+# corruption: fails cleanly, ownership intact
+# ---------------------------------------------------------------------------
+
+
+def test_corruption_fails_cleanly_paged(qwen, qwen_params):
+    inj = FaultInjector(seed=0)
+    srv = LLMServer(qwen, num_slots=2, capacity=96, params=qwen_params,
+                    engine_cfg=EngineConfig(cache_mode="paged", page_size=16),
+                    injector=inj)
+    inj.fail_next("extend_paged", 1, exc=CorruptionError,
+                  msg="corrupt page id")
+    bad = srv.submit("to be corrupted", SamplingParams(max_new_tokens=8))
+    with pytest.raises(CorruptionError):
+        bad.result()
+    assert bad.status() == RequestStatus.FAILED
+    good = srv.submit("to be corrupted", SamplingParams(max_new_tokens=8))
+    assert good.result() is not None            # same prompt now serves fine
+    _page_leak_check(srv)
+
+
+def test_corruption_snapshot_restore_keeps_session_tail():
+    """A corrupt snapshot restore fails only that turn; the session's
+    retained tail survives, so the retried turn still reuses it."""
+    cfg = _cfg("recurrentgemma-9b")
+    inj = FaultInjector(seed=0)
+    srv = LLMServer(cfg, num_slots=2, capacity=128,
+                    engine_cfg=EngineConfig(cache_mode="paged", page_size=16),
+                    injector=inj)
+    sess = srv.open_session()
+    sess.submit("sys: agent. turn one:",
+                SamplingParams(max_new_tokens=8)).result()
+    tail = srv.engine._sessions[sess.sid].tail_snap
+    assert tail >= 0
+    inj.fail_next("snap_restore", 1, exc=CorruptionError, msg="corrupt snap")
+    bad = sess.submit(sess.text + " turn two:",
+                      SamplingParams(max_new_tokens=8))
+    with pytest.raises(CorruptionError):
+        bad.result()
+    assert bad.status() == RequestStatus.FAILED
+    assert srv.engine._sessions[sess.sid].tail_snap == tail   # tail intact
+    retry = sess.submit(sess.text + " turn two:",
+                        SamplingParams(max_new_tokens=8))
+    assert retry.result() is not None
+    assert retry.request.prefix_hit_tokens > 0                # tail reused
+    sess.close()
+    _snap_leak_check(srv)
+
+
+# ---------------------------------------------------------------------------
+# watchdog: stalled dispatches are detected, not fatal
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_flags_stalled_dispatch(qwen, qwen_params):
+    inj = FaultInjector(seed=0)
+    srv = LLMServer(qwen, num_slots=1, capacity=96, params=qwen_params,
+                    injector=inj, watchdog_s=0.01)
+    inj.stall_next("decode", 1, stall_s=0.05)
+    h = srv.submit("stalled but alive", SamplingParams(max_new_tokens=8))
+    assert h.result() is not None
+    assert h.status() == RequestStatus.COMPLETED
+    assert srv.stats()["watchdog_stalls"] >= 1
+    assert inj.injected["decode.stall"] == 1
+
+
+# ---------------------------------------------------------------------------
+# crash-safe session recovery: journal replay is bit-identical
+# ---------------------------------------------------------------------------
+
+_T1 = "user: hello there assistant:"
+_T2 = " user: and what else? assistant:"
+
+
+@pytest.mark.parametrize("arch,mode", [("qwen2.5-3b", "dense"),
+                                       ("qwen2.5-3b", "paged"),
+                                       ("recurrentgemma-9b", "paged")])
+def test_restore_sessions_bit_identical(arch, mode, tmp_path):
+    """Kill a server after turn 1, restore its spilled journal on a fresh
+    server: turn 2's greedy output is bit-identical to an uninterrupted
+    two-turn server, in dense, paged, and snapshot modes."""
+    cfg = _cfg(arch)
+    ecfg = EngineConfig(cache_mode=mode, page_size=16)
+    ref = LLMServer(cfg, num_slots=2, capacity=192, engine_cfg=ecfg)
+    s = ref.open_session()
+    t1 = s.submit(_T1, SamplingParams(max_new_tokens=12)).result()
+    t2 = s.submit(s.text + _T2, SamplingParams(max_new_tokens=12)).result()
+
+    path = str(tmp_path / "sessions.json")
+    crashed = LLMServer(cfg, num_slots=2, capacity=192, engine_cfg=ecfg,
+                        params=ref.params, journal_path=path)
+    sa = crashed.open_session()
+    assert sa.submit(_T1, SamplingParams(max_new_tokens=12)).result() == t1
+    old_sid = sa.sid
+    del crashed                                   # the "crash"
+
+    fresh = LLMServer(cfg, num_slots=2, capacity=192, engine_cfg=ecfg,
+                      params=ref.params)
+    restored = fresh.restore_sessions(path)       # load + replay
+    sb = restored[old_sid]
+    assert sb.text == _T1 + t1                    # conversation text survives
+    assert sb.submit(sb.text + _T2,
+                     SamplingParams(max_new_tokens=12)).result() == t2
+    if mode == "paged" and arch == "qwen2.5-3b":
+        # the replay rebuilt the tail: turn 2 was served off retained state
+        assert fresh.stats()["turn_prefix_hits"] >= 1
+        _page_leak_check(fresh)
+
+
+def test_session_journal_roundtrip(tmp_path):
+    """Journal unit semantics: latest-state-per-sid, drop, atomic dump /
+    load roundtrip."""
+    j = SessionJournal()
+    j.record(1, "one", [5, 6, 7], 1)
+    j.record(2, "two", [8, 9], 1)
+    j.record(1, "one more", [5, 6, 7, 10, 11], 2)   # overwrite, not append
+    assert len(j) == 2
+    assert j.get(1).all_tokens == [5, 6, 7, 10, 11] and j.get(1).turns == 2
+    path = str(tmp_path / "j.json")
+    j.dump(path)
+    j2 = SessionJournal.load(path)
+    assert [e.sid for e in j2.entries()] == [1, 2]
+    assert j2.get(1).text == "one more" and j2.get(2).all_tokens == [8, 9]
+    j2.drop(1)
+    assert len(j2) == 1 and j2.get(1) is None
+    # spill-on-record: a path-bound journal persists every update
+    j3 = SessionJournal(path=str(tmp_path / "spill.json"))
+    j3.record(7, "x", [1, 2], 1)
+    assert SessionJournal.load(j3.path).get(7).all_tokens == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis chaos: random ops under seeded fault rates
+# ---------------------------------------------------------------------------
+
+_CHAOS = None
+_REF = None
+_REF_CACHE = {}
+
+_CHAOS_PROMPTS = ["sys: agent loop. task alpha",
+                  "sys: agent loop. task beta",
+                  "sys: agent loop. a rather longer task gamma request",
+                  "unrelated short prompt"]
+
+
+def _chaos_server():
+    """Shared paged chaos server: tiny pool (eviction + exhaustion
+    pressure), spec on (verify site live), small chunks (many fault
+    windows), aggressive-but-bounded retry."""
+    global _CHAOS
+    if _CHAOS is None:
+        inj = FaultInjector(seed=0)
+        srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=2, capacity=64,
+                        engine_cfg=EngineConfig(cache_mode="paged",
+                                                page_size=8, num_pages=18,
+                                                spec_len=4, decode_chunk=4),
+                        injector=inj,
+                        retry=RetryPolicy(max_attempts=3, backoff_s=1e-3))
+        _CHAOS = (srv, inj)
+    return _CHAOS
+
+
+def _ref_output(prompt, budget):
+    """Fault-free greedy reference for (prompt, budget), same params/knobs
+    as the chaos server (spec off: bit-identity is the non-spec contract)."""
+    global _REF
+    if _REF is None:
+        srv, _ = _chaos_server()
+        _REF = LLMServer(_cfg("qwen2.5-3b"), num_slots=2, capacity=64,
+                         params=srv.params,
+                         engine_cfg=EngineConfig(cache_mode="paged",
+                                                 page_size=8, num_pages=18,
+                                                 decode_chunk=4))
+    key = (prompt, budget)
+    if key not in _REF_CACHE:
+        _REF_CACHE[key] = _REF.submit(
+            prompt, SamplingParams(max_new_tokens=budget)).result()
+    return _REF_CACHE[key]
+
+
+@given(st.integers(0, 2 ** 16 - 1),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(2, 10)),
+                min_size=2, max_size=6))
+@settings(max_examples=15, deadline=None, derandomize=True)
+def test_chaos_paged_terminal_and_exactly_once(seed, ops):
+    """Random submissions under seeded fault rates on every paged site
+    (prefill-extend, decode, verify, pool alloc): after the drain every
+    handle is terminal, fault-free completions are bit-identical to the
+    no-fault reference, and page ownership is exactly-once."""
+    srv, inj = _chaos_server()
+    inj._rng.seed(seed)
+    inj.rates.update({"extend_paged": 0.08, "decode": 0.08, "verify": 0.05,
+                      "pool.alloc": 0.05})
+    try:
+        handles = []
+        for variant, budget in ops:
+            handles.append(srv.submit(_CHAOS_PROMPTS[variant],
+                                      SamplingParams(max_new_tokens=budget)))
+            srv.step()
+        srv.run_until_idle()
+    finally:
+        inj.rates.clear()
+        srv.run_until_idle()
+    for h in handles:
+        assert h.status().terminal, h.status()
+        assert h.status() in (RequestStatus.COMPLETED, RequestStatus.FAILED)
+        if h.status() == RequestStatus.COMPLETED:
+            # fault-free (or transparently retried) co-batched request:
+            # bit-identical to the fault-free reference
+            assert h.text == _ref_output(h.request.prompt,
+                                         h.request.max_new_tokens)
+        else:
+            assert h.exception() is not None
+    _page_leak_check(srv)
+
+
+_SNAP_CHAOS = None
+
+
+def _snap_chaos_server():
+    global _SNAP_CHAOS
+    if _SNAP_CHAOS is None:
+        inj = FaultInjector(seed=0)
+        srv = LLMServer(_cfg("recurrentgemma-9b"), num_slots=2, capacity=96,
+                        engine_cfg=EngineConfig(cache_mode="paged",
+                                                page_size=8, num_snapshots=8,
+                                                decode_chunk=4),
+                        injector=inj,
+                        retry=RetryPolicy(max_attempts=3, backoff_s=1e-3))
+        _SNAP_CHAOS = (srv, inj)
+    return _SNAP_CHAOS
+
+
+@given(st.integers(0, 2 ** 16 - 1),
+       st.lists(st.tuples(st.integers(0, 2), st.integers(2, 8)),
+                min_size=2, max_size=5))
+@settings(max_examples=10, deadline=None, derandomize=True)
+def test_chaos_snapshots_terminal_and_exactly_once(seed, ops):
+    """Snapshot-mode chaos (stateful arch): faults on prefill / extend /
+    decode / snapshot restore + arena exhaustion, with session turns in the
+    mix — every handle terminal, snapshot ownership exactly-once (a failed
+    capture degrades to a skipped capture, never a leak)."""
+    srv, inj = _snap_chaos_server()
+    inj._rng.seed(seed)
+    inj.rates.update({"prefill": 0.04, "extend": 0.06, "decode": 0.06,
+                      "snap_restore": 0.08, "snap.alloc": 0.15})
+    sess = srv.open_session()
+    try:
+        handles = []
+        for variant, budget in ops:
+            if variant == 2 and not sess.busy:
+                prompt = (sess.text or _CHAOS_PROMPTS[0]) + " next:"
+                handles.append(sess.submit(
+                    prompt, SamplingParams(max_new_tokens=budget)))
+            else:
+                handles.append(srv.submit(
+                    _CHAOS_PROMPTS[variant % len(_CHAOS_PROMPTS)],
+                    SamplingParams(max_new_tokens=budget)))
+            srv.step()
+        srv.run_until_idle()
+    finally:
+        inj.rates.clear()
+        srv.run_until_idle()
+        sess.close()
+    for h in handles:
+        assert h.status().terminal
+        assert h.status() in (RequestStatus.COMPLETED, RequestStatus.FAILED)
+    _snap_leak_check(srv)

@@ -281,7 +281,7 @@ def test_stream_increments_concatenate_to_result(qwen, qwen_params):
     pieces = list(h.stream())
     assert len(pieces) >= 2                       # incremental, not one blob
     assert "".join(pieces) == h.result() == h.text
-    assert h.status == "done"
+    assert h.status().value == "completed"
     assert srv.stats()["stream_chunks"] >= len(pieces)
 
 
@@ -297,10 +297,10 @@ def test_cancel_queued_and_midflight(qwen, qwen_params):
     a = srv.submit("request a " * 3, SamplingParams(max_new_tokens=24))
     b = srv.submit("request b " * 3, SamplingParams(max_new_tokens=24))
     srv.step()                                    # admit a, decode one chunk
-    assert a.status == "running" and b.status == "queued"
-    assert srv.cancel(b) and b.status == "cancelled"
+    assert a.status().value == "running" and b.status().value == "queued"
+    assert srv.cancel(b) and b.status().value == "cancelled"
     partial = a.text
-    assert srv.cancel(a) and a.status == "cancelled"
+    assert srv.cancel(a) and a.status().value == "cancelled"
     assert a.result() == a.text and a.text.startswith(partial)
     assert a.request.output_tokens > 0            # partial output kept
     assert not srv.cancel(a)                      # idempotent: already done
@@ -423,13 +423,90 @@ def test_cancel_leak_server_exercised():
               for _ in range(rng.randint(2, 5))]
         srv.step()
         victim = rng.choice(hs)
-        if victim.status == "running":
+        if victim.status().value == "running":
             mid_cancels += 1
         srv.cancel(victim)
         srv.run_until_idle()
         _cancel_leak_check(srv)
     assert mid_cancels > 0
     assert srv.stats()["cancelled_requests"] >= mid_cancels
+
+
+# ---------------------------------------------------------------------------
+# deadlines: TIMED_OUT within one chunk sync, resources freed, cancel races
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_times_out_midflight(qwen, qwen_params):
+    """A running request whose deadline elapses terminates TIMED_OUT at the
+    next chunk sync with partial output kept and every page freed; a
+    co-batched request is untouched."""
+    from repro.serving.server import DeadlineExceeded
+    srv = LLMServer(qwen, num_slots=2, capacity=128, params=qwen_params,
+                    engine_cfg=EngineConfig(cache_mode="paged",
+                                            decode_chunk=2))
+    h = srv.submit("deadline bounded request",
+                   SamplingParams(max_new_tokens=64, deadline_s=30.0))
+    survivor = srv.submit("co-batched survivor",
+                          SamplingParams(max_new_tokens=48))
+    while h.status().value != "running":
+        srv.step()
+    srv.step()
+    h.request._submit_t -= 100.0          # push the submit past the deadline
+    srv.step()                            # ... the next chunk sync notices
+    assert h.done and h.status().value == "timed_out"
+    assert h.status().terminal
+    assert isinstance(h.exception(), DeadlineExceeded)
+    assert h.result() == h.request.output_text   # partial output kept
+    assert survivor.result() and survivor.status().value == "completed"
+    assert srv.stats()["timed_out"] == 1
+    eng = srv.engine
+    assert all(s.request is None for s in eng.slots)
+    owned = eng.radix.check_invariants()
+    free = set(eng.kvpool._free)
+    assert not (owned & free)
+    assert len(owned) + len(free) == eng.kvpool.num_pages - eng.kvpool.reserved
+
+
+def test_deadline_default_and_queued_expiry(qwen, qwen_params):
+    """The server-level default deadline applies to every request that does
+    not override it; a request can time out while still queued."""
+    srv = LLMServer(qwen, num_slots=1, capacity=128, params=qwen_params,
+                    default_deadline_s=1e-6)
+    a = srv.submit("will expire", SamplingParams(max_new_tokens=8))
+    b = srv.submit("will finish",
+                   SamplingParams(max_new_tokens=8, deadline_s=300.0))
+    a.result(), b.result()
+    assert a.status().value == "timed_out"        # server default applied
+    assert b.status().value == "completed"        # per-request override wins
+    assert a.request.output_tokens == 0           # expired before admission
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(2, 12),
+                          st.integers(0, 3)),
+                min_size=2, max_size=8))
+@settings(max_examples=25, deadline=None)
+def test_deadline_cancel_race_no_leak(ops):
+    """Deadline expiry racing explicit cancel() (and normal completion)
+    on the shared tiny-pool cancel server: whichever terminal state wins,
+    every handle lands in exactly one of them and the exactly-once page
+    ownership invariant holds after the drain."""
+    srv = _cancel_server()
+    handles = []
+    for kind, budget, steps in ops:
+        dl = (None, 1e-6, 0.02)[kind]
+        handles.append(srv.submit(
+            "err 429 err 429 err 429. tail %d" % (budget % 3),
+            SamplingParams(max_new_tokens=budget, deadline_s=dl)))
+        for _ in range(steps):
+            srv.step()
+        if kind == 2:
+            srv.cancel(handles[-(1 + steps % len(handles))])
+    srv.run_until_idle()
+    for h in handles:
+        assert h.status().terminal
+        assert h.status().value in ("completed", "cancelled", "timed_out")
+    _cancel_leak_check(srv)
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,26 @@
 """Shared harness for the FAME paper-figure benchmarks (Figs. 4–7).
 
 Runs both applications × all five Table-1 configs × all three inputs and
-aggregates the traces. Everything is deterministic (the paper averages three
-runs of a stochastic LLM; our oracle is exact, so one run per cell — noted in
-EXPERIMENTS.md)."""
+aggregates the traces, on either backend:
+
+* ``llm="oracle"`` — the seed's simulated-clock path (``core/runtime``):
+  deterministic, no jax needed.
+* ``llm="jax"`` — the real serving stack (``fame/``): every agent turn and
+  tool injection is a request on one warm ``LLMServer`` with tiny untrained
+  configs; decisions stay oracle-guided so statuses are identical across
+  backends (determinism note in EXPERIMENTS.md). Each cell gets a fresh
+  ``ServingMeter`` plus a server-stats delta, so the per-cell serving story
+  (tail reuse, cache × radix hits, fault taxonomy) survives sharing one
+  warm server across the matrix.
+
+Everything is deterministic (the paper averages three runs of a stochastic
+LLM; our decisions are exact, so one run per cell — noted in EXPERIMENTS.md).
+"""
 from __future__ import annotations
 
+import argparse
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.apps import log_analytics as la
 from repro.apps import research_summary as rs
@@ -16,6 +29,8 @@ from repro.core.runtime import FameRuntime
 
 APPS = {"RS": rs, "LA": la}
 CONFIG_ORDER = ["E", "N", "C", "M", "M+C"]
+MEMORY_CONFIGS = ("M", "M+C")      # persistent-session (tail-reuse) configs
+CACHING_CONFIGS = ("C", "M+C")     # toolflow-injection configs
 
 
 @dataclasses.dataclass
@@ -33,20 +48,106 @@ class CellResult:
     faas_mcp_cents: List[float]
     tool_calls: List[int]
     cache_hits: int
+    serving: Optional[dict] = None     # jax backend only: meter summary,
+                                       # per-request records, stats delta,
+                                       # gate booleans
 
     @property
     def dnf(self):
         return [s != "SUCCEEDED" for s in self.statuses]
 
 
-def run_cell(app_key: str, config: str, inp: str,
-             fusion: str = "singleton") -> CellResult:
-    app = APPS[app_key]
-    rt = FameRuntime(config=CONFIGS[config], fusion_mode=fusion)
+# ---------------------------------------------------------------------------
+# Real-server harness (shared warm LLMServer across the matrix)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class JaxHarness:
+    server: object
+    driver: object
+    injector: object
+    arch: str
+    page_size: int
+    max_new_tokens: int
+    cobatch: bool
+
+
+def make_harness(arch: str = "qwen2.5-3b", *, max_new_tokens: int = 8,
+                 capacity: int = 2048, num_slots: int = 4,
+                 page_size: int = 16, cobatch: bool = False,
+                 seed: int = 0) -> JaxHarness:
+    """One warm server for every cell: tiny float32 config, paged KV (radix
+    sharing on), an armable-but-inert FaultInjector, and a warmup turn so
+    the smallest prefill/decode programs compile before timing starts."""
+    from repro.configs.registry import ARCHS
+    from repro.serving.faults import FaultInjector
+    from repro.serving.scheduler import EngineConfig, SamplingParams
+    from repro.serving.server import LLMServer
+    from repro.fame.fusion import CoBatchDriver, SerialDriver
+
+    cfg = ARCHS[arch].reduced(dtype="float32", param_dtype="float32",
+                              vocab_size=512)
+    injector = FaultInjector(seed=seed)
+    server = LLMServer(cfg, num_slots=num_slots, capacity=capacity,
+                       engine_cfg=EngineConfig(cache_mode="paged",
+                                               page_size=page_size,
+                                               decode_chunk=8),
+                       injector=injector, seed=seed)
+    h = server.submit("warmup " * 8,
+                      SamplingParams(max_new_tokens=max_new_tokens))
+    server.run_until_idle()
+    assert h.request.finished
+    driver = CoBatchDriver(server) if cobatch else SerialDriver(server)
+    return JaxHarness(server=server, driver=driver, injector=injector,
+                      arch=arch, page_size=page_size,
+                      max_new_tokens=max_new_tokens, cobatch=cobatch)
+
+
+def _build_serving_runtime(app, config: str, fusion: str,
+                           harness: JaxHarness, **rt_kwargs):
+    from repro.fame import ServingMeter, WorkflowServingRuntime
+    from repro.serving.scheduler import SamplingParams
+    meter = ServingMeter(harness.server)
+    rt = WorkflowServingRuntime(
+        config=CONFIGS[config], server=harness.server,
+        driver=harness.driver, meter=meter,
+        params=SamplingParams(max_new_tokens=harness.max_new_tokens),
+        fusion_mode=fusion, **rt_kwargs)
     for role, o in app.build_oracles().items():
         rt.set_llm(role, o)
     rt.deploy_mcp(app.APP.servers, app.APP.sources)
-    res = rt.run_session(f"{app_key}-{inp}", app.APP.queries(inp))
+    return rt, meter
+
+
+def run_cell(app_key: str, config: str, inp: str,
+             fusion: str = "singleton", llm: str = "oracle",
+             harness: Optional[JaxHarness] = None) -> CellResult:
+    app = APPS[app_key]
+    serving = None
+    if llm == "jax":
+        if harness is None:
+            harness = make_harness()
+        rt, meter = _build_serving_runtime(app, config, fusion, harness)
+        before = meter.snapshot()
+        res = rt.run_session(f"{app_key}-{inp}", app.APP.queries(inp))
+        after = meter.snapshot()
+        serving = {
+            "meter": meter.summary(),
+            "stats_delta": meter.delta(before, after),
+            "records": [dataclasses.asdict(r) for r in meter.records],
+            "tail_reuse_ok": meter.tail_reuse_ok(),
+            "injection_radix_ok": meter.injection_radix_ok(
+                harness.page_size),
+            "all_terminal": (meter.all_terminal()
+                             and after.get("queued_requests", 0) == 0
+                             and after.get("live_requests", 0) == 0),
+        }
+    else:
+        rt = FameRuntime(config=CONFIGS[config], fusion_mode=fusion)
+        for role, o in app.build_oracles().items():
+            rt.set_llm(role, o)
+        rt.deploy_mcp(app.APP.servers, app.APP.sources)
+        res = rt.run_session(f"{app_key}-{inp}", app.APP.queries(inp))
     e2e, splits, itoks, otoks, llmc, agc, mcpc, calls = [], [], [], [], [], [], [], []
     for tr in res.traces:
         faas = [s for s in tr.spans if s.kind == "faas"]
@@ -70,14 +171,163 @@ def run_cell(app_key: str, config: str, inp: str,
                          and s.attrs.get("method") == "tools/call"
                          or (s.kind == "mcp" and s.attrs.get("cache_hit"))))
     return CellResult(app_key, config, inp, res.statuses, e2e, splits,
-                      itoks, otoks, llmc, agc, mcpc, calls, rt.cache.hits)
+                      itoks, otoks, llmc, agc, mcpc, calls, rt.cache.hits,
+                      serving)
 
 
-def run_matrix(fusion: str = "singleton"):
+def run_matrix(fusion: str = "singleton", llm: str = "oracle",
+               smoke: bool = False,
+               harness: Optional[JaxHarness] = None):
+    if llm == "jax" and harness is None:
+        harness = make_harness()
     out = {}
     for app_key, app in APPS.items():
+        inputs = app.APP.inputs[:1] if smoke else app.APP.inputs
         for config in CONFIG_ORDER:
-            for inp in app.APP.inputs:
-                out[(app_key, config, inp)] = run_cell(app_key, config, inp,
-                                                       fusion=fusion)
+            for inp in inputs:
+                out[(app_key, config, inp)] = run_cell(
+                    app_key, config, inp, fusion=fusion, llm=llm,
+                    harness=harness)
     return out
+
+
+# ---------------------------------------------------------------------------
+# CLI plumbing shared by the fig benchmarks
+# ---------------------------------------------------------------------------
+
+def add_common_args(ap: argparse.ArgumentParser, default_out: str):
+    ap.add_argument("--llm", choices=["oracle", "jax"], default="oracle",
+                    help="oracle = simulated-clock seed path; jax = real "
+                         "LLMServer inference (EXPERIMENTS.md)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one input per app instead of three (CI gate)")
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--fusion", choices=["singleton", "consolidated"],
+                    default="singleton")
+    ap.add_argument("--out", default=default_out)
+    return ap
+
+
+def matrix_from_args(args):
+    harness = None
+    if args.llm == "jax":
+        harness = make_harness(args.arch)
+    matrix = run_matrix(fusion=args.fusion, llm=args.llm,
+                        smoke=args.smoke, harness=harness)
+    return matrix, harness
+
+
+def matrix_to_dict(matrix) -> dict:
+    return {f"{k[0]}/{k[1]}/{k[2]}": dataclasses.asdict(v)
+            for k, v in matrix.items()}
+
+
+# ---------------------------------------------------------------------------
+# CI gates (fig4_latency --smoke --llm jax)
+# ---------------------------------------------------------------------------
+
+def check_jax_gates(matrix, harness: JaxHarness) -> List[str]:
+    """The acceptance invariants for the real-inference matrix; returns a
+    list of human-readable failures (empty = pass)."""
+    failures = []
+    apps = sorted({k[0] for k in matrix})
+
+    def cells(app, config):
+        return [v for k, v in matrix.items()
+                if k[0] == app and k[1] == config]
+
+    for app in apps:
+        e_lat = sum(sum(c.e2e_s) for c in cells(app, "E"))
+        mc_lat = sum(sum(c.e2e_s) for c in cells(app, "M+C"))
+        if not mc_lat < e_lat:
+            failures.append(f"{app}: M+C e2e latency {mc_lat:.1f}s not "
+                            f"below baseline E {e_lat:.1f}s")
+        e_tok = sum(sum(c.in_tokens) for c in cells(app, "E"))
+        mc_tok = sum(sum(c.in_tokens) for c in cells(app, "M+C"))
+        if not mc_tok < e_tok:
+            failures.append(f"{app}: M+C input tokens {mc_tok} not below "
+                            f"baseline E {e_tok}")
+
+    for app in apps:
+        for config in MEMORY_CONFIGS:
+            for c in cells(app, config):
+                m = c.serving["meter"]
+                if m["continuation_turns"] == 0:
+                    failures.append(f"{app}/{config}/{c.inp}: no session "
+                                    "tail continuations recorded")
+                if not c.serving["tail_reuse_ok"]:
+                    failures.append(f"{app}/{config}/{c.inp}: a continuation "
+                                    "turn re-prefilled its history")
+                if c.serving["stats_delta"].get("turn_prefix_hits", 0) <= 0:
+                    failures.append(f"{app}/{config}/{c.inp}: server stats "
+                                    "show no turn_prefix_hits")
+
+    hit_injections = 0
+    for app in apps:
+        for config in CACHING_CONFIGS:
+            for c in cells(app, config):
+                hit_injections += c.serving["meter"]["cache_hit_injections"]
+                if not c.serving["injection_radix_ok"]:
+                    failures.append(f"{app}/{config}/{c.inp}: a cache-hit "
+                                    "injection re-prefilled instead of "
+                                    "radix-hitting")
+    if hit_injections == 0:
+        failures.append("no cache-hit tool injections anywhere in the "
+                        "caching configs — cache × radix composition "
+                        "untested")
+
+    for k, c in matrix.items():
+        if c.serving is not None and not c.serving["all_terminal"]:
+            failures.append(f"{'/'.join(k)}: non-terminal handles or "
+                            "stranded engine work")
+    return failures
+
+
+def check_fault_path(harness: JaxHarness, app_key: str = "LA") -> dict:
+    """Per-state Retry over the PR-6 taxonomy, on the real server.
+
+    Scenario 1 — injected fault: arm the injector to fail the next decode
+    dispatch with ``RequestFault`` (decode always runs; a warm radix cache
+    can route admission around the bucketed-prefill site); the planner turn
+    dies FAILED, the state machine's Retry re-runs the state, the workflow
+    still SUCCEEDs.
+    Scenario 2 — deadline: a microscopic per-turn ``deadline_s`` times every
+    turn out; retries exhaust; the workflow dead-letters into FailState.
+    """
+    from repro.core.workflow import Retry
+    from repro.serving.faults import RequestFault
+    app = APPS[app_key]
+    report: dict = {}
+
+    harness.injector.fail_next("decode", n=1,
+                               exc=RequestFault, msg="injected chaos")
+    rt, meter = _build_serving_runtime(
+        app, "M+C", "singleton", harness,
+        state_retry=Retry(max_attempts=2, backoff_s=0.1))
+    res = rt.run_session(f"{app_key}-fault", app.APP.queries(
+        app.APP.inputs[0])[:1])
+    report["fault_retry_statuses"] = res.statuses
+    report["fault_error_types"] = sorted(
+        {r.error_type for r in meter.records if r.error_type})
+    report["fault_all_terminal"] = meter.all_terminal()
+
+    rt, meter = _build_serving_runtime(
+        app, "M+C", "singleton", harness,
+        state_retry=Retry(max_attempts=2, backoff_s=0.01),
+        state_deadline_s=1e-4)
+    res = rt.run_session(f"{app_key}-deadline", app.APP.queries(
+        app.APP.inputs[0])[:1])
+    report["deadline_statuses"] = res.statuses
+    report["deadline_error_types"] = sorted(
+        {r.error_type for r in meter.records if r.error_type})
+    report["deadline_all_terminal"] = meter.all_terminal()
+
+    report["ok"] = (report["fault_retry_statuses"] == ["SUCCEEDED"]
+                    and "RequestFault" in report["fault_error_types"]
+                    and report["fault_all_terminal"]
+                    and all(s == "FAILED"
+                            for s in report["deadline_statuses"])
+                    and report["deadline_error_types"]
+                        == ["DeadlineExceeded"]
+                    and report["deadline_all_terminal"])
+    return report

@@ -1,11 +1,29 @@
-"""Fig. 6 — Monetary cost decomposition: LLM vs agent-FaaS vs MCP-FaaS."""
+"""Fig. 6 — Monetary cost decomposition: LLM vs agent-FaaS vs MCP-FaaS.
+
+Under ``--llm jax`` the LLM component is priced from billed serving tokens
+and the FaaS components meter real wall seconds charged into the simulated
+clock (EXPERIMENTS.md §Billing)."""
 from __future__ import annotations
 
-from benchmarks.fame_common import CONFIG_ORDER, run_matrix
+import argparse
+import os
+import sys
+
+try:
+    from benchmarks import fame_common as fc
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import fame_common as fc
 
 
-def main(matrix=None):
-    matrix = matrix or run_matrix()
+def main(matrix=None, argv=None):
+    args = None
+    if matrix is None:
+        ap = fc.add_common_args(argparse.ArgumentParser(description=__doc__),
+                                default_out="results/fame_fig6.json")
+        args = ap.parse_args(argv if argv is not None else [])
+        matrix, _ = fc.matrix_from_args(args)
     print("fig6,app,input,config,llm_cents,agent_faas_cents,mcp_faas_cents,"
           "total_cents,llm_share")
     totals = {}
@@ -26,8 +44,12 @@ def main(matrix=None):
             if base:
                 best = max(best, (base - ours) / base)
     print(f"fig6_derived,max_cost_reduction,{best * 100:.0f}%")
-    return {"max_cost_reduction": best}
+    out = {"max_cost_reduction": best}
+    if args is not None:
+        from repro.fame.trace import write_artifact
+        write_artifact(args.out, dict(out, matrix=fc.matrix_to_dict(matrix)))
+    return out
 
 
 if __name__ == "__main__":
-    main()
+    main(argv=sys.argv[1:])

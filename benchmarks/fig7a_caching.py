@@ -1,18 +1,41 @@
 """Fig. 7a — MCP caching effect: Actor latency breakdown, N vs C.
 
 Comparing N (no cache, no agent memory) against C (cache + S3 file handling,
-no agent memory) isolates the MCP-level optimizations, per §5.3.1."""
+no agent memory) isolates the MCP-level optimizations, per §5.3.1. Under
+``--llm jax`` the C cells additionally exercise the cache × radix composition
+(fame/toolflow.py): warm tool results re-enter the token stream as radix
+prefix hits."""
 from __future__ import annotations
 
-from benchmarks.fame_common import run_cell
+import argparse
+import os
+import sys
+
+try:
+    from benchmarks import fame_common as fc
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import fame_common as fc
 
 
-def main(matrix=None):
+def main(matrix=None, argv=None):
+    args = harness = None
+    if argv is not None or matrix is None:
+        ap = fc.add_common_args(argparse.ArgumentParser(description=__doc__),
+                                default_out="results/fame_fig7a.json")
+        args = ap.parse_args(argv if argv is not None else [])
+        if args.llm == "jax":
+            harness = fc.make_harness(args.arch)
     print("fig7a,app,input,query,config,actor_s,llm_s,mcp_s,cache_hits")
     reductions = []
+    cells_by_app = {}
     for app in ("RS", "LA"):
         inp = {"RS": "P1", "LA": "L1"}[app]
-        cells = {c: run_cell(app, c, inp) for c in ("N", "C")}
+        llm = args.llm if args is not None else "oracle"
+        cells = {c: fc.run_cell(app, c, inp, llm=llm, harness=harness)
+                 for c in ("N", "C")}
+        cells_by_app[app] = cells
         for qi in range(3):
             for cname, cell in cells.items():
                 sp = cell.agent_split_s[qi]
@@ -25,8 +48,16 @@ def main(matrix=None):
                 reductions.append((n_mcp - c_mcp) / n_mcp)
     avg = sum(reductions) / len(reductions) if reductions else 0.0
     print(f"fig7a_derived,avg_warm_mcp_latency_reduction,{avg * 100:.0f}%")
-    return {"mcp_latency_reduction": avg}
+    out = {"mcp_latency_reduction": avg}
+    if args is not None:
+        import dataclasses
+        from repro.fame.trace import write_artifact
+        write_artifact(args.out, dict(
+            out, cells={f"{a}/{c}": dataclasses.asdict(cell)
+                        for a, cells in cells_by_app.items()
+                        for c, cell in cells.items()}))
+    return out
 
 
 if __name__ == "__main__":
-    main()
+    main(argv=sys.argv[1:])

@@ -13,8 +13,7 @@ import time
 from repro.apps import research_summary as rs
 from repro.configs.registry import ARCHS
 from repro.core.config import CONFIGS
-from repro.core.llm import JaxLLM, rates_for_arch
-from repro.core.runtime import FameRuntime
+from repro.fame import WorkflowServingRuntime
 from repro.serving.server import EngineConfig, LLMServer, SamplingParams
 
 ROLES = [("planner", "Plan the next step toward the goal."),
@@ -109,23 +108,26 @@ def main():
               f"({stats['prefix_hit_tokens']}/{stats['prompt_tokens']}), "
               f"{stats['radix_nodes']} radix nodes, {pool}")
 
-    # 2) the same server as the FAME agents' LLM backend (one workflow
-    #    invocation through the real runtime; JaxLLM keys a session per role)
-    rt = FameRuntime(config=CONFIGS["M+C"], max_iterations=1)
-    backend = JaxLLM(server, max_new_tokens=8,
-                     latency=rates_for_arch(args.arch),
-                     temperature=args.temperature, top_k=args.top_k)
-    for role in ("planner", "actor", "evaluator"):
-        rt.set_llm(role, backend)
+    # 2) the same server under the FAME workflow runtime (docs/fame.md):
+    #    one persistent session per invocation chain (memory == tail reuse),
+    #    oracle-guided decisions, tool results injected through the cache
+    rt = WorkflowServingRuntime(
+        config=CONFIGS["M+C"], server=server,
+        params=SamplingParams(max_new_tokens=8,
+                              temperature=args.temperature, top_k=args.top_k))
+    for role, oracle in rs.build_oracles().items():
+        rt.set_llm(role, oracle)
     rt.deploy_mcp(rs.APP.servers, rs.APP.sources)
-    res = rt.run_session("serve-demo", rs.queries("P1")[:1])
-    tr = res.traces[0]
-    i_tok, o_tok = tr.llm_tokens()
-    print(f"agent workflow on JaxLLM: status={res.statuses[0]} "
-          f"llm_calls={tr.count('llm')} in_tok={i_tok} out_tok={o_tok}")
-    print("(untrained weights -> workflow outcome is expected to DNF; the "
-          "point is the full tokenize->prefill->decode serving path under "
-          "the agents)")
+    res = rt.run_session("serve-demo", rs.APP.queries("P1")[:2])
+    m = rt.meter.summary()
+    print(f"FAME workflow on the server: statuses={res.statuses} "
+          f"turns={m['turns']} injections={m['injections']} "
+          f"billed_in={m['billed_in_tokens']} of {m['prompt_tokens']} "
+          f"prompt tokens ({m['continuation_turns']} continuation turns "
+          f"reused the session tail)")
+    print("(decisions are oracle-guided over the served conversation — "
+          "untrained weights decode noise — but every agent turn and tool "
+          "injection above was a real tokenize->prefill->decode request)")
 
 
 if __name__ == "__main__":

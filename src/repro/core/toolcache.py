@@ -4,11 +4,19 @@ Cache key = H(tool name, canonicalized arguments); entries live in an object
 store bucket with the TTL in metadata. Developers set per-tool TTLs —
 ``-1`` (infinite; e.g. DOI downloads), ``0`` (never cache; e.g. stock quotes),
 or a finite number of seconds.
+
+Canonicalization is explicit: only JSON-safe argument values participate in
+the key (None, bool, int, finite float, str, list/tuple, dict with str keys).
+Anything else raises ``TypeError`` instead of being silently keyed by its
+``str()`` repr — two distinct objects with equal reprs must not collide, and
+a non-JSON type sneaking into a key is a caching bug at the call site, not
+something to paper over.
 """
 from __future__ import annotations
 
 import hashlib
 import json
+import math
 from typing import Any, Optional, Tuple
 
 from repro.core.objectstore import ObjectStore
@@ -17,8 +25,50 @@ from repro.core.telemetry import emit
 CACHE_BUCKET = "fame-mcp-cache"
 
 
+def canonicalize(value: Any, path: str = "args") -> Any:
+    """Canonical JSON-safe form of a tool-argument value.
+
+    Tuples become lists, dict keys are required to be strings (ordering is
+    handled by sorted serialization, not here). Non-finite floats and any
+    other type raise ``TypeError`` naming the offending path.
+    """
+    if value is None or isinstance(value, (bool, str)):
+        return value
+    if isinstance(value, int):
+        return value
+    if isinstance(value, float):
+        if not math.isfinite(value):
+            raise TypeError(
+                f"tool argument {path} is a non-finite float ({value!r}); "
+                "non-finite floats have no canonical JSON form")
+        return value
+    if isinstance(value, (list, tuple)):
+        return [canonicalize(v, f"{path}[{i}]") for i, v in enumerate(value)]
+    if isinstance(value, dict):
+        for k in value:
+            if not isinstance(k, str):
+                raise TypeError(
+                    f"tool argument {path} has a non-string dict key "
+                    f"({k!r}); cache keys require string-keyed mappings")
+        return {k: canonicalize(value[k], f"{path}.{k}")
+                for k in sorted(value)}
+    raise TypeError(
+        f"tool argument {path} has non-JSON type {type(value).__name__}; "
+        "pass JSON-safe values (None/bool/int/float/str/list/dict) or mark "
+        "the tool ttl_s=0 / cacheable=False")
+
+
+def canonical_args_text(args: dict) -> str:
+    """Deterministic rendering of tool arguments — shared by the cache key
+    and the serving layer's tool-stream injection (fame/toolflow.py), so a
+    cached result re-enters the token stream byte-identically."""
+    return json.dumps(canonicalize(args), sort_keys=True,
+                      separators=(",", ":"))
+
+
 def cache_key(tool: str, args: dict) -> str:
-    canon = json.dumps({"tool": tool, "args": args}, sort_keys=True, default=str)
+    canon = json.dumps({"tool": tool, "args": canonicalize(args)},
+                       sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(canon.encode()).hexdigest()
 
 

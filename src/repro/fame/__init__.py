@@ -1,0 +1,19 @@
+"""FAME workflow runtime on the real serving stack (docs/fame.md).
+
+``core/`` keeps the paper-faithful simulated FAME layer; this package binds
+the same Planner → Actor → Evaluator state machine to the ``LLMServer`` of
+PRs 1–6: persistent sessions as agent memory, canonical tool-stream injection
+as cache × radix composition, co-batched handles as function fusion, and the
+PR-6 fault taxonomy as Step-Function per-state Retry.
+"""
+from repro.fame.bindings import ChainBinding, ServingAgents
+from repro.fame.fusion import CoBatchDriver, SerialDriver
+from repro.fame.runtime import WorkflowServingRuntime
+from repro.fame.toolflow import ToolFlow, canonical_tool_message
+from repro.fame.trace import ServingMeter, TurnRecord, write_artifact
+
+__all__ = [
+    "ChainBinding", "ServingAgents", "CoBatchDriver", "SerialDriver",
+    "WorkflowServingRuntime", "ToolFlow", "canonical_tool_message",
+    "ServingMeter", "TurnRecord", "write_artifact",
+]

@@ -1,0 +1,139 @@
+"""Function fusion on the serving side: co-batched handles (§3.3.2).
+
+The paper consolidates MCP servers into one Lambda so co-resident functions
+share a container. On the serving stack the analogue is sharing *engine
+steps*: agent invocations that would run in one fused container submit their
+requests together and decode in the same continuous batch
+(``active_slots_per_step > 1``), instead of each invocation draining the
+server alone.
+
+Two drivers with one contract — ``call(submit_thunk) -> finished Handle`` and
+``run(thunks) -> results``:
+
+* ``SerialDriver`` — the singleton deployment. Each agent turn drains before
+  the next submits; one workflow owns the engine at a time.
+* ``CoBatchDriver`` — the consolidated deployment. Workflow state machines
+  run on worker threads, but **all** JAX work (submit + ``server.step()``)
+  happens on the single pump thread: workers hand over submit thunks and
+  block until their request reaches a terminal status. Pump order drains
+  every pending submit before stepping, so turns from concurrent workflows
+  co-batch inside one engine iteration.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, Optional
+
+
+class SerialDriver:
+    """Drain-per-call driver: the unfused baseline."""
+
+    def __init__(self, server):
+        self.server = server
+
+    def call(self, submit: Callable[[], Any]):
+        h = submit()
+        while not h.request.finished:
+            self.server.step()
+        return h
+
+    def run(self, thunks: List[Callable[[], Any]]) -> List[Any]:
+        return [t() for t in thunks]
+
+
+class CoBatchDriver:
+    """Single-pump-thread co-batching driver.
+
+    JAX dispatch is not thread-safe across our program cache, so the pump
+    thread is the only one that ever touches the server. ``call()`` from a
+    worker enqueues the submit thunk and blocks; ``call()`` with no pump
+    running (plain single-threaded use) degrades to SerialDriver behaviour.
+    """
+
+    def __init__(self, server):
+        self.server = server
+        self._cv = threading.Condition()
+        self._pending: list = []        # (submit, box, event)
+        self._inflight: list = []       # (handle, box, event)
+        self._live_workers = 0
+        self._pump_thread: Optional[threading.Thread] = None
+
+    # ---- worker side -------------------------------------------------------
+    def call(self, submit: Callable[[], Any]):
+        if (self._pump_thread is None
+                or threading.current_thread() is self._pump_thread):
+            h = submit()
+            while not h.request.finished:
+                self.server.step()
+            return h
+        box: dict = {}
+        ev = threading.Event()
+        with self._cv:
+            self._pending.append((submit, box, ev))
+            self._cv.notify()
+        ev.wait()
+        if "error" in box:
+            raise box["error"]
+        return box["handle"]
+
+    # ---- pump side ---------------------------------------------------------
+    def run(self, thunks: List[Callable[[], Any]]) -> List[Any]:
+        """Run every thunk on its own worker thread while this thread pumps
+        the server; returns thunk results in order."""
+        results: List[Any] = [None] * len(thunks)
+        errors: List[Any] = [None] * len(thunks)
+
+        def worker(i: int, thunk: Callable[[], Any]):
+            try:
+                results[i] = thunk()
+            except BaseException as e:        # surfaced after join
+                errors[i] = e
+            finally:
+                with self._cv:
+                    self._live_workers -= 1
+                    self._cv.notify()
+
+        threads = [threading.Thread(target=worker, args=(i, t), daemon=True)
+                   for i, t in enumerate(thunks)]
+        with self._cv:
+            self._live_workers = len(threads)
+        self._pump_thread = threading.current_thread()
+        try:
+            for th in threads:
+                th.start()
+            while True:
+                with self._cv:
+                    if (self._live_workers == 0 and not self._pending
+                            and not self._inflight):
+                        break
+                    pending, self._pending = self._pending, []
+                    if not pending and not self._inflight:
+                        self._cv.wait(timeout=0.05)
+                        continue
+                # admit every pending submit before stepping -> co-batch
+                for submit, box, ev in pending:
+                    try:
+                        h = submit()
+                    except BaseException as e:
+                        box["error"] = e
+                        ev.set()
+                    else:
+                        self._inflight.append((h, box, ev))
+                if self._inflight:
+                    self.server.step()
+                    still = []
+                    for h, box, ev in self._inflight:
+                        if h.request.finished:
+                            box["handle"] = h
+                            ev.set()
+                        else:
+                            still.append((h, box, ev))
+                    self._inflight = still
+            for th in threads:
+                th.join()
+        finally:
+            self._pump_thread = None
+        for e in errors:
+            if e is not None:
+                raise e
+        return results

@@ -730,6 +730,12 @@ class Scheduler:
             "watchdog_stalls": self.progs.watchdog_stalls,
             "journaled_sessions": len(self.journal),
             "stream_chunks": self._stream_chunks,
+            # live-work gauges (not counters): a drained server shows 0/0 —
+            # the FAME workflow gate asserts every handle reached a terminal
+            # status with nothing stranded in the queue or a slot
+            "queued_requests": len(self._queue),
+            "live_requests": sum(1 for s in self.slots
+                                 if s.request is not None),
             "engine_steps": self._steps,
             "active_slots_per_step": self._active_slot_sum /
                 max(self._steps, 1),

@@ -1,0 +1,161 @@
+"""The FAME workflow runtime on the real serving stack (src/repro/fame/).
+
+One tiny warm server for the whole module; cells assert the PR's serving
+invariants directly: backend-identical workflow statuses (oracle-guided
+decisions), session tail reuse on memory configs (delta billing, no history
+re-prefill), the cache × radix composition (a tool-cache hit re-injects
+token-identically and radix-hits), fault taxonomy → per-state Retry mapping,
+and CoBatchDriver actually co-batching concurrent submits."""
+import threading
+
+import pytest
+
+from repro.apps import log_analytics as la
+from repro.configs.registry import ARCHS
+from repro.core.config import CONFIGS
+from repro.core.runtime import FameRuntime
+from repro.core.workflow import Retry
+from repro.fame import CoBatchDriver, ServingMeter, WorkflowServingRuntime
+from repro.serving.faults import FaultInjector, RequestFault
+from repro.serving.scheduler import EngineConfig, SamplingParams
+from repro.serving.server import LLMServer
+
+PAGE = 16
+APP = la
+INPUT = APP.APP.inputs[0]
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfg = ARCHS["qwen2.5-3b"].reduced(dtype="float32", param_dtype="float32",
+                                      vocab_size=512)
+    injector = FaultInjector(seed=0)
+    srv = LLMServer(cfg, num_slots=4, capacity=2048,
+                    engine_cfg=EngineConfig(cache_mode="paged",
+                                            page_size=PAGE, decode_chunk=8),
+                    injector=injector, seed=0)
+    h = srv.submit("warmup " * 8, SamplingParams(max_new_tokens=8))
+    srv.run_until_idle()
+    assert h.request.finished
+    return srv
+
+
+def build_rt(server, config, **kw):
+    meter = ServingMeter(server)
+    rt = WorkflowServingRuntime(config=CONFIGS[config], server=server,
+                                meter=meter,
+                                params=SamplingParams(max_new_tokens=8), **kw)
+    for role, oracle in APP.build_oracles().items():
+        rt.set_llm(role, oracle)
+    rt.deploy_mcp(APP.APP.servers, APP.APP.sources)
+    return rt, meter
+
+
+@pytest.fixture(scope="module")
+def mc_cell(server):
+    """One full M+C client session (persistent chain + caching) on the real
+    server, shared by the assertions below."""
+    rt, meter = build_rt(server, "M+C")
+    res = rt.run_session(f"fame-test-{INPUT}", APP.APP.queries(INPUT))
+    return res, meter
+
+
+def test_statuses_identical_to_oracle_backend(mc_cell):
+    res, _ = mc_cell
+    oracle_rt = FameRuntime(config=CONFIGS["M+C"])
+    for role, oracle in APP.build_oracles().items():
+        oracle_rt.set_llm(role, oracle)
+    oracle_rt.deploy_mcp(APP.APP.servers, APP.APP.sources)
+    oracle_res = oracle_rt.run_session(f"fame-test-{INPUT}",
+                                       APP.APP.queries(INPUT))
+    assert res.statuses == oracle_res.statuses
+
+
+def test_memory_config_reuses_session_tail(mc_cell):
+    res, meter = mc_cell
+    conts = meter.continuation_turns()
+    assert conts, "persistent chain recorded no continuation turns"
+    # continuation turns bill the delta, not the conversation
+    assert meter.tail_reuse_ok()
+    for r in conts:
+        assert 0 < r.billed_tokens < r.prompt_tokens
+    # engine-side confirmation: admitted off the retained tail
+    assert all(r.prefix_hit_tokens > 0 for r in conts)
+    assert meter.all_terminal()
+
+
+def test_cache_hit_injection_radix_hits(server):
+    # config C: sessionless but caching — repeated tool calls within the
+    # session hit the MCP cache, and their re-injections must be served
+    # from shared radix pages, billing zero
+    rt, meter = build_rt(server, "C")
+    rt.run_session(f"fame-test-c-{INPUT}", APP.APP.queries(INPUT))
+    injects = meter.turns("inject")
+    hits = [r for r in injects if r.cache_hit]
+    misses = [r for r in injects if not r.cache_hit]
+    assert hits, "no cache-hit injections in config C"
+    assert misses, "no cache-miss injections in config C"
+    assert meter.injection_radix_ok(PAGE)
+    assert all(r.billed_tokens == 0 for r in hits)
+    assert all(r.billed_tokens == r.prompt_tokens for r in misses)
+    assert rt.cache.hits == len(hits)
+
+
+def test_injected_fault_absorbed_by_state_retry(server):
+    # a RequestFault raised by the engine surfaces through the turn into the
+    # Step-Functions Retry, which re-runs the state; workflow still succeeds
+    server.engine.injector.fail_next("decode", n=1, exc=RequestFault,
+                                     msg="injected chaos")
+    rt, meter = build_rt(server, "M+C",
+                         state_retry=Retry(max_attempts=2, backoff_s=0.1))
+    res = rt.run_session("fame-test-fault", APP.APP.queries(INPUT)[:1])
+    assert res.statuses == ["SUCCEEDED"]
+    assert "RequestFault" in {r.error_type for r in meter.records}
+    assert any(r.status == "failed" for r in meter.records)
+    assert meter.all_terminal()
+
+
+def test_deadline_dead_letters_workflow(server):
+    rt, meter = build_rt(server, "M+C",
+                         state_retry=Retry(max_attempts=2, backoff_s=0.01),
+                         state_deadline_s=1e-4)
+    res = rt.run_session("fame-test-deadline", APP.APP.queries(INPUT)[:1])
+    assert all(s == "FAILED" for s in res.statuses)
+    assert {r.error_type for r in meter.records
+            if r.error_type} == {"DeadlineExceeded"}
+    assert meter.all_terminal()
+    stats = server.stats()
+    assert stats["queued_requests"] == 0 and stats["live_requests"] == 0
+
+
+def test_cobatch_driver_shares_engine_steps(server):
+    driver = CoBatchDriver(server)
+    params = SamplingParams(max_new_tokens=8)
+    before = server.stats()
+
+    def turn(i):
+        return driver.call(
+            lambda: server.submit(f"cobatch worker {i} asks a question " * 3,
+                                  params))
+
+    handles = driver.run([lambda i=i: turn(i) for i in range(3)])
+    assert all(h.request.finished for h in handles)
+    assert len({h.request.output_text for h in handles}) >= 1
+    after = server.stats()
+    steps = after["engine_steps"] - before["engine_steps"]
+    slot_sum = (after["active_slots_per_step"] * after["engine_steps"]
+                - before["active_slots_per_step"] * before["engine_steps"])
+    assert steps > 0
+    assert slot_sum / steps > 1.05, "concurrent submits did not co-batch"
+    assert threading.active_count() >= 1   # workers joined, none leaked
+
+
+def test_sessionless_config_bills_full_prompt(server):
+    # config N re-sends client history each call: every turn is sessionless
+    # and bills its full rendered prompt (the Fig. 5 token bloat)
+    rt, meter = build_rt(server, "N")
+    rt.run_session(f"fame-test-n-{INPUT}", APP.APP.queries(INPUT)[:2])
+    turns = meter.turns()
+    assert turns and not meter.continuation_turns()
+    assert all(r.billed_tokens == r.prompt_tokens for r in turns)
+    assert all(r.session_turn == 0 for r in turns)

@@ -1,0 +1,108 @@
+"""Tool-result cache (§3.3.2): key canonicalization and TTL boundary
+semantics.  The canonical rendering is load-bearing beyond hashing — the
+serving layer (fame/toolflow.py) re-injects cached results token-identically
+from ``canonical_args_text``, so equal-by-value args MUST serialize equal and
+non-JSON args MUST fail loudly rather than collide via ``str()`` reprs."""
+import math
+
+import pytest
+
+from repro.core.objectstore import ObjectStore
+from repro.core.toolcache import (CacheManager, cache_key, canonical_args_text,
+                                  canonicalize)
+
+
+# ---- canonicalization -----------------------------------------------------
+
+def test_canonicalize_json_scalars_pass_through():
+    assert canonicalize(None) is None
+    assert canonicalize(True) is True
+    assert canonicalize(3) == 3
+    assert canonicalize(2.5) == 2.5
+    assert canonicalize("x") == "x"
+
+
+def test_canonicalize_tuple_list_equivalence():
+    assert canonicalize((1, 2, ("a",))) == [1, 2, ["a"]]
+    assert (cache_key("t", {"xs": (1, 2)}) == cache_key("t", {"xs": [1, 2]}))
+
+
+def test_canonical_args_text_key_order_invariant():
+    assert (canonical_args_text({"b": 1, "a": {"d": 2, "c": 3}})
+            == canonical_args_text({"a": {"c": 3, "d": 2}, "b": 1}))
+    # compact separators: no whitespace drift between producer and re-injector
+    assert canonical_args_text({"a": [1, 2]}) == '{"a":[1,2]}'
+
+
+def test_canonicalize_rejects_non_json_types_with_path():
+    class Query:
+        def __repr__(self):
+            return "q"
+
+    with pytest.raises(TypeError, match=r"args\.q has non-JSON type Query"):
+        canonicalize({"q": Query()})
+    with pytest.raises(TypeError, match=r"args\[1\] has non-JSON type set"):
+        canonicalize([1, {2}])
+    with pytest.raises(TypeError, match="non-string dict key"):
+        canonicalize({"a": {1: "x"}})
+    with pytest.raises(TypeError, match="non-finite float"):
+        canonicalize({"x": math.inf})
+    with pytest.raises(TypeError, match="non-finite float"):
+        canonicalize([math.nan])
+
+
+def test_no_str_repr_collisions():
+    # two distinct objects with equal reprs must not silently share a key
+    class A:
+        def __repr__(self):
+            return "same"
+
+    class B:
+        def __repr__(self):
+            return "same"
+
+    for bad in (A(), B()):
+        with pytest.raises(TypeError):
+            cache_key("tool", {"arg": bad})
+    # and genuinely different JSON values never collide
+    assert cache_key("t", {"a": "1"}) != cache_key("t", {"a": 1})
+    assert cache_key("t", {"a": True}) != cache_key("t", {"a": 1})
+
+
+# ---- TTL boundaries -------------------------------------------------------
+
+def test_ttl_exactly_at_boundary_is_fresh():
+    # staleness is strict (now - put > ttl): an entry aged EXACTLY ttl_s
+    # seconds is still served; one tick past is not.
+    cache = CacheManager(ObjectStore())
+    cache.put("tool", {"a": 1}, {"out": 1}, ttl_s=10.0, t=100.0)
+    hit, val = cache.lookup("tool", {"a": 1}, ttl_s=10.0, t=110.0)
+    assert hit and val == {"out": 1}
+    hit, _ = cache.lookup("tool", {"a": 1}, ttl_s=10.0, t=110.0 + 1e-6)
+    assert not hit
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_ttl_minus_one_is_infinite_not_instant():
+    cache = CacheManager(ObjectStore())
+    cache.put("doi", {"id": "x"}, "pdf", ttl_s=-1, t=0.0)
+    hit, val = cache.lookup("doi", {"id": "x"}, ttl_s=-1, t=1e9)
+    assert hit and val == "pdf"
+
+
+def test_ttl_zero_never_caches_either_side():
+    # ttl_s=0 short-circuits both put and lookup — nothing is stored, and a
+    # lookup with ttl_s=0 misses even if an entry exists under another ttl.
+    cache = CacheManager(ObjectStore())
+    cache.put("quote", {"sym": "ACME"}, 99, ttl_s=0, t=0.0)
+    assert cache.store.list("fame-mcp-cache") == []
+    cache.put("quote", {"sym": "ACME"}, 99, ttl_s=-1, t=0.0)
+    hit, _ = cache.lookup("quote", {"sym": "ACME"}, ttl_s=0, t=0.0)
+    assert not hit and cache.misses == 0      # short-circuit: not even a miss
+
+
+def test_disabled_cache_is_inert():
+    cache = CacheManager(ObjectStore(), enabled=False)
+    cache.put("t", {}, 1, ttl_s=-1, t=0.0)
+    hit, _ = cache.lookup("t", {}, ttl_s=-1, t=0.0)
+    assert not hit and cache.store.list("fame-mcp-cache") == []

@@ -5,6 +5,11 @@ Scans all tracked-ish ``*.md`` files for ``[text](target)`` links, skips
 external schemes (http/https/mailto) and pure anchors, and fails listing
 every target whose path (relative to the linking file) does not exist.
 
+Also scans ``*.py`` sources for bare markdown-file mentions (docstrings
+and comments routinely point readers at docs — e.g. "see EXPERIMENTS.md
+§Perf") and fails on any that resolve against neither the repo root nor the
+referencing file's own directory: a doc a source file promises must exist.
+
     python tools/check_md_links.py [root]
 """
 import pathlib
@@ -15,6 +20,9 @@ SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".hypothesis", ".venv",
              "node_modules"}
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 EXTERNAL = re.compile(r"^([a-zA-Z][a-zA-Z0-9+.-]*:)")
+# bare doc mentions in source: path-ish tokens ending in ".md". The leading
+# character class rejects glob/regex fragments like "*.md" or "\.md".
+PY_MD_REF = re.compile(r"(?<![\w./\\*-])[A-Za-z0-9_][A-Za-z0-9_./-]*\.md\b")
 
 
 def main() -> int:
@@ -34,10 +42,21 @@ def main() -> int:
             checked += 1
             if not (md.parent / path).exists():
                 bad.append(f"{md.relative_to(root)}: broken link -> {target}")
+    py_checked = 0
+    for py in sorted(root.rglob("*.py")):
+        if SKIP_DIRS & set(py.parts):
+            continue
+        for m in PY_MD_REF.finditer(py.read_text(encoding="utf-8")):
+            ref = m.group(0)
+            py_checked += 1
+            if not ((root / ref).exists() or (py.parent / ref).exists()):
+                bad.append(f"{py.relative_to(root)}: dangling doc "
+                           f"reference -> {ref}")
     if bad:
         print("\n".join(bad))
         return 1
-    print(f"check_md_links: OK ({checked} intra-repo links resolve)")
+    print(f"check_md_links: OK ({checked} intra-repo links resolve, "
+          f"{py_checked} doc references from sources)")
     return 0
 
 

@@ -213,7 +213,7 @@ def main():
     if args.chaos:
         lat = sorted(latencies)
         p99 = lat[int(0.99 * (len(lat) - 1))] if lat else 0.0
-        terminal = {"completed", "cancelled", "timed_out", "failed"}
+        terminal = {"completed", "cancelled", "timed_out", "failed", "shed"}
         result["chaos"] = {
             "fault_rate": args.fault_rate,
             "faults_injected": sum(injector.injected.values()),

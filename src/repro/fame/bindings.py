@@ -38,7 +38,7 @@ from repro.core.memory import MemoryEntry
 from repro.core.telemetry import emit
 from repro.fame.toolflow import canonical_tool_message, clip_content
 from repro.fame.trace import TurnRecord
-from repro.serving.faults import DeadlineExceeded, RequestFault
+from repro.serving.faults import DeadlineExceeded, RequestFault, ShedError
 
 
 class ChainBinding:
@@ -110,6 +110,9 @@ class ChainBinding:
         if req.status == "timed_out":
             raise req.error if req.error is not None else \
                 DeadlineExceeded(f"turn rid={req.rid} exceeded its deadline")
+        if req.status == "shed":
+            raise req.error if req.error is not None else \
+                ShedError(f"turn rid={req.rid} shed under overload")
         return rec
 
     def close(self):

@@ -14,10 +14,18 @@ Two drivers with one contract — ``call(submit_thunk) -> finished Handle`` and
   the next submits; one workflow owns the engine at a time.
 * ``CoBatchDriver`` — the consolidated deployment. Workflow state machines
   run on worker threads, but **all** JAX work (submit + ``server.step()``)
-  happens on the single pump thread: workers hand over submit thunks and
+  happens on a single pump thread: workers hand over submit thunks and
   block until their request reaches a terminal status. Pump order drains
   every pending submit before stepping, so turns from concurrent workflows
   co-batch inside one engine iteration.
+
+When the server runs its own background pump (``LLMServer(pump=True)``,
+serving/pump.py), both drivers ride it instead of stepping: ``submit()`` is
+already thread-safe (it routes through the pump's command queue, which
+drains every pending submit before the next engine step — the same
+co-batching guarantee CoBatchDriver's inline loop provides), so workers
+just submit and block on ``Handle.wait()``. CoBatchDriver then degenerates
+to plain thread fan-out with the pump doing the driving.
 """
 from __future__ import annotations
 
@@ -26,13 +34,16 @@ from typing import Any, Callable, List, Optional
 
 
 class SerialDriver:
-    """Drain-per-call driver: the unfused baseline."""
+    """Drain-per-call driver: the unfused baseline. On a pumping server it
+    cannot (and must not) step — it submits and blocks on the handle."""
 
     def __init__(self, server):
         self.server = server
 
     def call(self, submit: Callable[[], Any]):
         h = submit()
+        if getattr(self.server, "pumping", False):
+            return h.wait()
         while not h.request.finished:
             self.server.step()
         return h
@@ -44,10 +55,14 @@ class SerialDriver:
 class CoBatchDriver:
     """Single-pump-thread co-batching driver.
 
-    JAX dispatch is not thread-safe across our program cache, so the pump
-    thread is the only one that ever touches the server. ``call()`` from a
-    worker enqueues the submit thunk and blocks; ``call()`` with no pump
-    running (plain single-threaded use) degrades to SerialDriver behaviour.
+    JAX dispatch is not thread-safe across our program cache, so exactly
+    one thread may touch the server. With a cooperative server this driver
+    provides that thread itself (``run()`` pumps inline while workers hand
+    over submit thunks); with ``LLMServer(pump=True)`` the server's
+    background pump already owns the loop and gives the same
+    submit-burst-then-step co-batching, so ``call()``/``run()`` just fan
+    out workers and block on handles. ``call()`` with neither pump running
+    (plain single-threaded use) degrades to SerialDriver behaviour.
     """
 
     def __init__(self, server):
@@ -60,6 +75,8 @@ class CoBatchDriver:
 
     # ---- worker side -------------------------------------------------------
     def call(self, submit: Callable[[], Any]):
+        if getattr(self.server, "pumping", False):
+            return submit().wait()
         if (self._pump_thread is None
                 or threading.current_thread() is self._pump_thread):
             h = submit()
@@ -79,7 +96,8 @@ class CoBatchDriver:
     # ---- pump side ---------------------------------------------------------
     def run(self, thunks: List[Callable[[], Any]]) -> List[Any]:
         """Run every thunk on its own worker thread while this thread pumps
-        the server; returns thunk results in order."""
+        the server (or, on a pumping server, while the background pump
+        drives); returns thunk results in order."""
         results: List[Any] = [None] * len(thunks)
         errors: List[Any] = [None] * len(thunks)
 
@@ -95,6 +113,17 @@ class CoBatchDriver:
 
         threads = [threading.Thread(target=worker, args=(i, t), daemon=True)
                    for i, t in enumerate(thunks)]
+        if getattr(self.server, "pumping", False):
+            with self._cv:
+                self._live_workers = len(threads)
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            for e in errors:
+                if e is not None:
+                    raise e
+            return results
         with self._cv:
             self._live_workers = len(threads)
         self._pump_thread = threading.current_thread()

@@ -15,7 +15,7 @@ import json
 import os
 from typing import Dict, List, Optional
 
-TERMINAL = ("completed", "failed", "timed_out", "cancelled")
+TERMINAL = ("completed", "failed", "timed_out", "cancelled", "shed")
 
 
 @dataclasses.dataclass

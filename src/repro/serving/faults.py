@@ -20,6 +20,16 @@ Taxonomy (all subclasses of ``RuntimeError``):
 * ``DeadlineExceeded`` — recorded on handles cancelled by deadline expiry.
 * ``DeadLetterError`` — retries exhausted; recorded on the dead-lettered
   handle(s) (``handle.exception()``).
+* ``OverloadError`` — admission refused by the overload policy (bounded
+  queue full, per-class depth cap, or circuit breaker open). Raised
+  synchronously from ``enqueue``/``submit`` — the request never existed.
+* ``ShedError`` — an ``OverloadError`` recorded on an *accepted* request
+  that the scheduler later shed from the queue (aged out, or its remaining
+  deadline can no longer cover the predicted service time). The handle
+  terminates with status ``"shed"`` instead of limping to a timeout.
+* ``PumpStalledError`` — the background pump (serving/pump.py) stopped
+  heartbeating while work was pending; surfaced to waiters instead of a
+  silent hang.
 
 Retry safety: injected faults are raised *before* the device dispatch, so a
 retried call re-runs bit-identically. A real exception escaping a jit call
@@ -33,17 +43,19 @@ import collections
 import dataclasses
 import enum
 import random
+import threading
 import time
 from typing import Dict, Optional
 
 __all__ = ["RequestStatus", "RetryPolicy", "FaultInjector", "FaultError",
            "TransientFault", "RequestFault", "CorruptionError",
-           "DeadlineExceeded", "DeadLetterError"]
+           "DeadlineExceeded", "DeadLetterError", "OverloadError",
+           "ShedError", "PumpStalledError"]
 
 
 class RequestStatus(str, enum.Enum):
     """Lifecycle of a request/handle. Every request terminates in exactly
-    one of the four terminal states — step-loop exceptions no longer
+    one of the five terminal states — step-loop exceptions no longer
     propagate to whichever caller happened to be pumping."""
     QUEUED = "queued"
     RUNNING = "running"
@@ -51,11 +63,13 @@ class RequestStatus(str, enum.Enum):
     CANCELLED = "cancelled"       # explicit cancel(); partial output kept
     TIMED_OUT = "timed_out"       # deadline_s expired; partial output kept
     FAILED = "failed"             # dead-lettered; handle.exception() has why
+    SHED = "shed"                 # dropped by overload policy before running
 
     @property
     def terminal(self) -> bool:
         return self in (RequestStatus.COMPLETED, RequestStatus.CANCELLED,
-                        RequestStatus.TIMED_OUT, RequestStatus.FAILED)
+                        RequestStatus.TIMED_OUT, RequestStatus.FAILED,
+                        RequestStatus.SHED)
 
 
 class FaultError(RuntimeError):
@@ -80,6 +94,22 @@ class DeadlineExceeded(FaultError):
 
 class DeadLetterError(FaultError):
     """Bounded retries exhausted; the request is dead-lettered."""
+
+
+class OverloadError(FaultError):
+    """Admission refused by the overload policy (queue/class caps, circuit
+    breaker). Raised synchronously from ``enqueue``/``submit``."""
+
+
+class ShedError(OverloadError):
+    """An accepted request shed from the queue by the overload policy
+    (queue-age cap, or predicted service time exceeds the remaining
+    deadline). Recorded on handles with terminal status ``"shed"``."""
+
+
+class PumpStalledError(FaultError):
+    """The background pump stopped heartbeating (or died) while work was
+    pending; raised to blocked waiters instead of hanging them."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +157,13 @@ class FaultInjector:
 
     ``injected`` counts every fired fault by site (suffix ``.deny`` for
     allocator denials, ``.stall`` for stalls).
+
+    Thread safety: hook sites are hit from the pump thread while tests and
+    callers arm faults from their own threads, so every armed-queue pop,
+    seeded-RNG draw, and counter bump happens under one lock. (The lock is
+    *not* held across a stall sleep — a stall must not serialize unrelated
+    sites.) Determinism under concurrency is per-thread-interleaving: a
+    single-threaded call sequence replays bit-identically given the seed.
     """
 
     def __init__(self, seed: int = 0, rates: Optional[Dict[str, float]] = None):
@@ -135,54 +172,63 @@ class FaultInjector:
         self._armed: Dict[str, list] = collections.defaultdict(list)
         self._deny: collections.Counter = collections.Counter()
         self.injected: collections.Counter = collections.Counter()
+        self._lock = threading.Lock()
 
     # ---- arming ------------------------------------------------------------
     def fail_next(self, site: str, n: int = 1, *, exc=TransientFault,
                   msg: Optional[str] = None):
         """Arm the next ``n`` dispatches of ``site`` to raise ``exc``."""
-        for _ in range(n):
-            self._armed[site].append(
-                ("raise", exc(msg or f"injected fault at {site!r}")))
+        with self._lock:
+            for _ in range(n):
+                self._armed[site].append(
+                    ("raise", exc(msg or f"injected fault at {site!r}")))
 
     def exhaust_next(self, site: str = "pool.alloc", n: int = 1):
         """Arm the next ``n`` allocations at ``site`` to be denied (the
         allocator behaves as if exhausted)."""
-        self._deny[site] += n
+        with self._lock:
+            self._deny[site] += n
 
     def stall_next(self, site: str, n: int = 1, *, stall_s: float = 0.05):
         """Arm the next ``n`` dispatches of ``site`` to stall ``stall_s``
         (a stuck step for the watchdog to notice)."""
-        for _ in range(n):
-            self._armed[site].append(("stall", stall_s))
+        with self._lock:
+            for _ in range(n):
+                self._armed[site].append(("stall", stall_s))
 
     # ---- hook points -------------------------------------------------------
     def check(self, site: str):
         """Dispatch hook: consume one armed action (raise / stall) or roll
         the site's rate for a ``TransientFault``."""
-        q = self._armed.get(site)
-        if q:
-            kind, val = q.pop(0)
-            if kind == "stall":
-                self.injected[site + ".stall"] += 1
-                time.sleep(val)
-                return
-            self.injected[site] += 1
-            raise val
-        r = self.rates.get(site)
-        if r and self._rng.random() < r:
-            self.injected[site] += 1
-            raise TransientFault(f"injected fault at {site!r} (rate {r})")
+        with self._lock:
+            q = self._armed.get(site)
+            if q:
+                kind, val = q.pop(0)
+                if kind == "stall":
+                    self.injected[site + ".stall"] += 1
+                else:
+                    self.injected[site] += 1
+                    raise val
+            else:
+                r = self.rates.get(site)
+                if not (r and self._rng.random() < r):
+                    return
+                self.injected[site] += 1
+                raise TransientFault(
+                    f"injected fault at {site!r} (rate {r})")
+        time.sleep(val)  # stall: sleep outside the lock
 
     def take(self, site: str) -> bool:
         """Allocator hook: True = deny this allocation (simulated
         exhaustion). Never raises — the caller's normal out-of-resource
         path (eviction, admission backoff, skipped capture) must handle it."""
-        if self._deny.get(site, 0) > 0:
-            self._deny[site] -= 1
-            self.injected[site + ".deny"] += 1
-            return True
-        r = self.rates.get(site)
-        if r and self._rng.random() < r:
-            self.injected[site + ".deny"] += 1
-            return True
-        return False
+        with self._lock:
+            if self._deny.get(site, 0) > 0:
+                self._deny[site] -= 1
+                self.injected[site + ".deny"] += 1
+                return True
+            r = self.rates.get(site)
+            if r and self._rng.random() < r:
+                self.injected[site + ".deny"] += 1
+                return True
+            return False

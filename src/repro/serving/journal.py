@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 from typing import Dict, List, Optional
 
 __all__ = ["JournalEntry", "SessionJournal"]
@@ -50,43 +51,54 @@ class SessionJournal:
     Records are idempotent per sid (each turn's finalize overwrites the
     session's entry); ``drop`` removes a closed session. Spill writes are
     atomic (temp file + rename) so a crash mid-spill leaves the previous
-    consistent journal on disk.
+    consistent journal on disk. All mutation and the spill run under one
+    re-entrant lock: the pump thread finalizes turns while caller threads
+    close sessions / dump, and two concurrent atomic renames of the same
+    temp file would otherwise race.
     """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self._entries: Dict[int, JournalEntry] = {}
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def record(self, sid: int, text: str, all_tokens: List[int], turns: int):
-        self._entries[sid] = JournalEntry(sid, text, list(all_tokens), turns)
-        if self.path:
-            self._spill()
+        with self._lock:
+            self._entries[sid] = JournalEntry(sid, text, list(all_tokens),
+                                              turns)
+            if self.path:
+                self._spill()
 
     def drop(self, sid: int):
-        if self._entries.pop(sid, None) is not None and self.path:
-            self._spill()
+        with self._lock:
+            if self._entries.pop(sid, None) is not None and self.path:
+                self._spill()
 
     def get(self, sid: int) -> Optional[JournalEntry]:
-        return self._entries.get(sid)
+        with self._lock:
+            return self._entries.get(sid)
 
     def entries(self) -> List[JournalEntry]:
         """Stable snapshot (by sid) — safe to iterate while restoring into
         a journal-keeping server."""
-        return [self._entries[k] for k in sorted(self._entries)]
+        with self._lock:
+            return [self._entries[k] for k in sorted(self._entries)]
 
     # ---- persistence -------------------------------------------------------
     def _spill(self):
         self.dump(self.path)
 
     def dump(self, path: str):
-        tmp = path + ".tmp"
-        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-        with open(tmp, "w") as f:
-            json.dump([dataclasses.asdict(e) for e in self.entries()], f)
-        os.replace(tmp, path)
+        with self._lock:
+            tmp = path + ".tmp"
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            with open(tmp, "w") as f:
+                json.dump([dataclasses.asdict(e) for e in self.entries()], f)
+            os.replace(tmp, path)
 
     @classmethod
     def load(cls, path: str) -> "SessionJournal":

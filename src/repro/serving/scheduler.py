@@ -62,7 +62,8 @@ import jax.numpy as jnp
 from repro.models import Model
 from repro.serving import kvpool
 from repro.serving.faults import (DeadLetterError, DeadlineExceeded,
-                                  RequestFault, RetryPolicy)
+                                  OverloadError, RequestFault, RetryPolicy,
+                                  ShedError)
 from repro.serving.journal import JournalEntry, SessionJournal
 from repro.serving.programs import EnginePrograms, auto_buckets
 from repro.serving.radix import RadixTree
@@ -181,6 +182,52 @@ class EngineConfig:
     spec_warmup: int = 64
 
 
+@dataclasses.dataclass(frozen=True)
+class OverloadPolicy:
+    """Bounded-admission / load-shedding / preemption knobs (all off by
+    default field-wise; pass an instance to enable overload control).
+
+    max_queue_depth: global queued-request cap. A submit over the cap
+                     displaces the *youngest strictly-lower-priority* queued
+                     request (shed with ``ShedError``) or, when none exists,
+                     raises ``OverloadError`` to the submitter.
+    class_depth:     per-priority queued-request caps ({priority: depth}).
+                     A full class rejects its own submits with
+                     ``OverloadError`` — one tenant class cannot displace
+                     its own peers by hammering the queue.
+    max_queue_age_s / class_age_s:
+                     queued requests older than the cap (per-priority value
+                     wins over the global one) are shed at the next step —
+                     a request that has already waited past usefulness
+                     terminates typed instead of aging into a timeout.
+    shed_on_deadline: predictive shedding — a queued request whose remaining
+                     deadline cannot cover its predicted service time (EWMA
+                     of observed per-token prefill/decode rates) is shed
+                     *immediately* rather than admitted to certainly time
+                     out. No-op until the engine has observed one completion.
+    shed_margin:     safety factor on the prediction (1.0 = shed when
+                     remaining < predicted; larger sheds earlier).
+    preempt:         under admission pressure, a running strictly-lower-
+                     priority decode is preempted at the chunk boundary and
+                     re-queued for bit-identical resumption (RNG chain and
+                     token stream continue exactly; see ``_preempt_slot``).
+    breaker_threshold: consecutive dispatch dead-letters that trip the
+                     circuit breaker (0 disables it).
+    breaker_cooldown_s: submits are rejected with ``OverloadError`` for this
+                     long after the breaker trips; any successful dispatch
+                     resets the consecutive-failure count.
+    """
+    max_queue_depth: Optional[int] = None
+    class_depth: Optional[Dict[int, int]] = None
+    max_queue_age_s: Optional[float] = None
+    class_age_s: Optional[Dict[int, float]] = None
+    shed_on_deadline: bool = True
+    shed_margin: float = 1.0
+    preempt: bool = True
+    breaker_threshold: int = 5
+    breaker_cooldown_s: float = 1.0
+
+
 @dataclasses.dataclass(eq=False)
 class Request:
     rid: int
@@ -202,11 +249,15 @@ class Request:
     decode_s: float = 0.0
     latency_s: float = 0.0
     admit_index: int = -1
+    first_token_s: float = 0.0     # TTFT: submit -> first sampled token
+                                   # (set at first activation; preserved
+                                   # across preempt/resume)
+    preempted: int = 0             # times this request was preempted
     finished: bool = False         # reached a terminal status
     cancelled: bool = False
     status: str = "queued"         # RequestStatus value (serving/faults.py):
                                    # queued/running -> completed | cancelled
-                                   # | timed_out | failed
+                                   # | timed_out | failed | shed
     error: Optional[BaseException] = None    # why FAILED / TIMED_OUT
     deadline_s: Optional[float] = None       # resolved (param or server default)
     _submit_t: float = 0.0
@@ -219,7 +270,13 @@ class Request:
                                    # admission batching (paged mode)
     _key: Optional[object] = None  # per-request PRNG key (chain base)
     _key0: Optional[object] = None # fold_in(_key, 0): first-token sample key
+                                   # (re-derived as fold_in(_key, k) when a
+                                   # preempted request resumes k tokens in)
     _sess: Optional[object] = None # owning _SessionState for session turns
+    _pre_gen: Optional[list] = None  # preemption: tokens generated before
+                                     # the preempt; re-prefilled on resume
+    _orig_plen: int = 0            # admitted prompt length (pre tokens
+                                   # excluded) — fixed at first activation
 
 
 @dataclasses.dataclass
@@ -285,7 +342,8 @@ class Scheduler:
                  retry: Optional[RetryPolicy] = None,
                  default_deadline_s: Optional[float] = None,
                  injector=None, journal_path: Optional[str] = None,
-                 watchdog_s: Optional[float] = None):
+                 watchdog_s: Optional[float] = None,
+                 overload: Optional[OverloadPolicy] = None):
         self.engine_cfg = engine_cfg or EngineConfig()
         # fault-tolerance layer (serving/faults.py): bounded retry of
         # transient dispatch faults, deadline default, chaos hooks, and the
@@ -293,6 +351,9 @@ class Scheduler:
         self.retry = retry or RetryPolicy()
         self.default_deadline_s = default_deadline_s
         self.injector = injector
+        # overload-control layer: None = unbounded admission (the pre-PR-8
+        # behaviour); see OverloadPolicy for the knobs
+        self.overload = overload
         self.journal = SessionJournal(journal_path)
         self._backoff_rng = random.Random(seed ^ 0x5EED)
         if self.engine_cfg.decode_chunk < 1:
@@ -419,6 +480,17 @@ class Scheduler:
         self._admission_retries = 0              # pool-exhaustion backoffs
         self._dead_lettered = 0                  # requests terminated FAILED
         self._timed_out = 0                      # requests terminated TIMED_OUT
+        # overload-control counters / state (OverloadPolicy)
+        self._shed = 0                           # requests terminated SHED
+        self._preempted = 0                      # running slots preempted
+        self._preempt_resumes = 0                # preempted requests resumed
+        self._breaker_trips = 0                  # circuit-breaker opens
+        self._breaker_failures = 0               # consecutive dead-letters
+        self._breaker_open_until = 0.0
+        # EWMA service-time model for predictive shedding (s per token);
+        # None until the first completion is observed
+        self._svc_prefill_tok_s: Optional[float] = None
+        self._svc_decode_tok_s: Optional[float] = None
 
         donate = self.engine_cfg.donate
         if donate is None:
@@ -462,6 +534,7 @@ class Scheduler:
             raise ValueError(
                 "empty prompt (pass token_ids= to replay an exact stream)")
         stop = (p.stop,) if isinstance(p.stop, str) else tuple(p.stop or ())
+        self._admission_gate(p)
         self._next_rid += 1
         req = Request(self._next_rid, prompt, p.max_new_tokens, p.temperature,
                       p.top_k, stop=stop, priority=p.priority)
@@ -504,10 +577,56 @@ class Scheduler:
         self._insert_by_priority(req)
         return req
 
-    def _insert_by_priority(self, req: Request):
+    def _admission_gate(self, p: "SamplingParams"):
+        """Bounded admission (OverloadPolicy): reject-or-displace BEFORE a
+        request object exists, so a refused submit costs the caller one
+        typed ``OverloadError`` and the engine nothing."""
+        ov = self.overload
+        if ov is None:
+            return
+        now = time.perf_counter()
+        if now < self._breaker_open_until:
+            raise OverloadError(
+                "circuit breaker open for another "
+                f"{self._breaker_open_until - now:.3f}s after "
+                f"{ov.breaker_threshold} consecutive dispatch dead-letters")
+        cap = (ov.class_depth or {}).get(p.priority)
+        if cap is not None and sum(1 for r in self._queue
+                                   if r.priority == p.priority) >= cap:
+            raise OverloadError(
+                f"priority-{p.priority} admission queue full "
+                f"(class_depth={cap})")
+        if (ov.max_queue_depth is not None
+                and len(self._queue) >= ov.max_queue_depth):
+            # displace the youngest strictly-lower-priority queued request;
+            # an arrival that outranks nothing is the one rejected
+            victim = None
+            for r in reversed(self._queue):
+                if r.priority < p.priority:
+                    victim = r
+                    break
+            if victim is None:
+                raise OverloadError(
+                    f"admission queue full "
+                    f"(max_queue_depth={ov.max_queue_depth})")
+            self._abort(victim, "shed", ShedError(
+                f"rid={victim.rid}: displaced from a full queue "
+                f"(depth {ov.max_queue_depth}) by a priority-{p.priority} "
+                f"arrival (own priority {victim.priority})"))
+
+    def _insert_by_priority(self, req: Request, *, resumed: bool = False):
         """FIFO within a priority class: insert before the first queued
-        request of strictly lower priority."""
+        request of strictly lower priority. A preempted request re-queues at
+        the *front* of its class (``resumed``) — it was admitted before every
+        queued peer, so front-of-class preserves true submit order."""
         q = self._queue
+        if resumed:
+            for i, r in enumerate(q):
+                if r.priority <= req.priority:
+                    q.insert(i, req)
+                    return
+            q.append(req)
+            return
         if not q or q[-1].priority >= req.priority:
             q.append(req)
             return
@@ -527,9 +646,10 @@ class Scheduler:
     def _abort(self, req: Request, status: str,
                error: Optional[BaseException] = None) -> bool:
         """Terminate a queued or in-flight request in a non-completed
-        terminal status (cancelled / timed_out / failed), releasing every
-        resource it holds. Deadline expiry and dead-lettering reuse the
-        cancellation path, so the leak invariants cover all three."""
+        terminal status (cancelled / timed_out / failed / shed), releasing
+        every resource it holds. Deadline expiry, dead-lettering, and load
+        shedding reuse the cancellation path, so the leak invariants cover
+        all of them."""
         if req.finished:
             return False
         if req in self._queue:
@@ -582,6 +702,8 @@ class Scheduler:
             self._timed_out += 1
         elif status == "failed":
             self._dead_lettered += 1
+        elif status == "shed":
+            self._shed += 1
         if req._sess is not None and req._sess.live is req:
             req._sess.live = None
 
@@ -600,6 +722,127 @@ class Scheduler:
             self._abort(req, "timed_out", DeadlineExceeded(
                 f"rid={req.rid}: deadline_s={req.deadline_s} elapsed "
                 f"after {now - req._submit_t:.3f}s"))
+
+    # ---- overload control (OverloadPolicy) ---------------------------------
+    def _predict_service_s(self, req: Request) -> Optional[float]:
+        """Predicted wall-clock to serve ``req`` from admission to finish,
+        from the EWMA per-token prefill/decode rates of observed
+        completions. None until the engine has decode-rate data."""
+        if self._svc_decode_tok_s is None:
+            return None
+        n_prompt = (len(req._ids) if req._ids is not None
+                    else len(req.prompt))       # ByteTokenizer ~1 tok/char
+        n_prompt = min(n_prompt, self.capacity)
+        budget = req.max_new_tokens - len(req._pre_gen or [])
+        return ((self._svc_prefill_tok_s or 0.0) * n_prompt
+                + self._svc_decode_tok_s * budget)
+
+    def _note_service(self, req: Request):
+        """Fold one completion into the EWMA service-time model."""
+        if req.output_tokens and req.decode_s > 0:
+            per = req.decode_s / req.output_tokens
+            self._svc_decode_tok_s = (
+                per if self._svc_decode_tok_s is None
+                else 0.8 * self._svc_decode_tok_s + 0.2 * per)
+        if req.prompt_tokens and req.prefill_s > 0:
+            per = req.prefill_s / req.prompt_tokens
+            self._svc_prefill_tok_s = (
+                per if self._svc_prefill_tok_s is None
+                else 0.8 * self._svc_prefill_tok_s + 0.2 * per)
+
+    def _shed_sweep(self, now: float):
+        """Shed queued requests the overload policy says can't be served
+        usefully: past their (per-class) age cap, or — predictively — with
+        a remaining deadline the EWMA service model says cannot be met.
+        Typed, immediate termination beats limping into a timeout."""
+        ov = self.overload
+        for r in list(self._queue):
+            age = now - r._submit_t
+            cap = (ov.class_age_s or {}).get(r.priority, ov.max_queue_age_s)
+            if cap is not None and age > cap:
+                self._abort(r, "shed", ShedError(
+                    f"rid={r.rid}: queued {age:.3f}s > age cap {cap}s "
+                    f"(priority {r.priority})"))
+                continue
+            if not ov.shed_on_deadline or r.deadline_s is None:
+                continue
+            eta = self._predict_service_s(r)
+            if eta is None:
+                continue
+            left = r._submit_t + r.deadline_s - now
+            if left < eta * ov.shed_margin:
+                self._abort(r, "shed", ShedError(
+                    f"rid={r.rid}: remaining deadline {left:.3f}s cannot "
+                    f"cover predicted service time {eta:.3f}s "
+                    f"(shed_margin={ov.shed_margin})"))
+
+    def _breaker_note(self, ok: bool):
+        """Circuit breaker over dispatch dead-letters: ``breaker_threshold``
+        consecutive failures open the breaker (submits rejected) for
+        ``breaker_cooldown_s``; any successful dispatch resets the count."""
+        ov = self.overload
+        if ov is None or ov.breaker_threshold <= 0:
+            return
+        if ok:
+            self._breaker_failures = 0
+            return
+        self._breaker_failures += 1
+        if self._breaker_failures >= ov.breaker_threshold:
+            self._breaker_open_until = (time.perf_counter()
+                                        + ov.breaker_cooldown_s)
+            self._breaker_trips += 1
+            self._breaker_failures = 0
+
+    def _preempt_for_priority(self, now: float):
+        """Priority preemption at the chunk boundary: when an admittable
+        queued request outranks a running one and no free slot can serve it,
+        the lowest-priority running slot (most budget left on ties — least
+        progress thrown away) is preempted and re-queued for bit-identical
+        resumption. Strictly-greater priority only, and a resumed request
+        keeps its class, so two classes can't ping-pong one slot."""
+        ov = self.overload
+        if not ov.preempt or not self._queue:
+            return
+        free = sum(1 for s in self.slots if s.request is None)
+        cands = [r for r in self._queue if r._retry_at <= now][free:]
+        eos = self.tokenizer.eos_id
+        for cand in cands:
+            victim, vkey = None, None
+            for si, s in enumerate(self.slots):
+                r = s.request
+                if (r is None or r.priority >= cand.priority
+                        or s.remaining <= 0 or s.stopped
+                        or s.generated[-1] == eos):   # finalizes this step
+                    continue
+                k = (r.priority, -s.remaining)
+                if vkey is None or k < vkey:
+                    victim, vkey = si, k
+            if victim is None:
+                return
+            self._preempt_slot(victim)
+
+    def _preempt_slot(self, si: int):
+        """Preempt slot ``si``: release everything it holds (pages / pins /
+        the session tail page — the cancel machinery) and re-queue its
+        request so a later admission resumes it *bit-identically*: the
+        resumed prefill re-processes prompt + the ``k`` already-generated
+        tokens (identical KV/state — same tokens, same positions) and the
+        RNG chain continues at ``fold_in(key, k)``, exactly the key token
+        ``k`` would have been sampled with uninterrupted."""
+        slot = self.slots[si]
+        req = slot.request
+        pre = list(slot.generated)
+        req._pre_gen = pre
+        req._ids = (slot.token_ids[:req._orig_plen]
+                    if slot.token_ids is not None else []) + pre
+        req._key0 = jax.random.fold_in(req._key, len(pre))
+        self._release_slot(si)
+        req.status = "queued"
+        req._retry_at = 0.0
+        req._admit_attempts = 0
+        req.preempted += 1
+        self._preempted += 1
+        self._insert_by_priority(req, resumed=True)
 
     # ---- sessions ----------------------------------------------------------
     def open_session(self) -> int:
@@ -730,12 +973,31 @@ class Scheduler:
             "watchdog_stalls": self.progs.watchdog_stalls,
             "journaled_sessions": len(self.journal),
             "stream_chunks": self._stream_chunks,
+            # overload-control counters (OverloadPolicy; all zero without
+            # one): typed sheds, chunk-boundary preemptions and their
+            # resumed admissions, and circuit-breaker opens
+            "shed_requests": self._shed,
+            "preemptions": self._preempted,
+            "preempt_resumes": self._preempt_resumes,
+            "breaker_trips": self._breaker_trips,
+            "breaker_open": time.perf_counter() < self._breaker_open_until,
+            # EWMA service-time model feeding predictive shedding (s/token;
+            # 0.0 until the first completion is observed)
+            "ewma_prefill_s_per_tok": self._svc_prefill_tok_s or 0.0,
+            "ewma_decode_s_per_tok": self._svc_decode_tok_s or 0.0,
             # live-work gauges (not counters): a drained server shows 0/0 —
             # the FAME workflow gate asserts every handle reached a terminal
             # status with nothing stranded in the queue or a slot
             "queued_requests": len(self._queue),
             "live_requests": sum(1 for s in self.slots
                                  if s.request is not None),
+            # queue-shape gauges: depth per priority class and the oldest
+            # queued request's wait so far (overload dashboards / gates)
+            "queue_depth_by_priority": dict(collections.Counter(
+                r.priority for r in self._queue)),
+            "queue_age_max_s": max(
+                (time.perf_counter() - r._submit_t for r in self._queue),
+                default=0.0),
             "engine_steps": self._steps,
             "active_slots_per_step": self._active_slot_sum /
                 max(self._steps, 1),
@@ -815,11 +1077,18 @@ class Scheduler:
                                     dtype=jnp.dtype(self.cfg.dtype))
         return tokens, positions
 
+    def _req_budget(self, req: Request) -> int:
+        """Remaining output budget: max_new_tokens, minus tokens already
+        generated before a preemption (they re-prefill, not re-generate)."""
+        return req.max_new_tokens - len(req._pre_gen or [])
+
     def _encode_prompt(self, req: Request) -> List[int]:
         """Tokenize + clamp to the capacity window, counting what was cut
-        (the seed engine dropped tokens here with no trace at all)."""
-        window = self.capacity - req.max_new_tokens - 1   # >= 1 (enqueue guard)
-        if req._ids is None:
+        (the seed engine dropped tokens here with no trace at all). A
+        preempted request's window grows by its pre-generated token count,
+        so the resume never truncates deeper than the original admission."""
+        window = self.capacity - self._req_budget(req) - 1   # >= 1 (enqueue
+        if req._ids is None:                                 # guard)
             req._ids = self.tokenizer.encode(req.prompt)
         full = req._ids
         ids = full[-window:]
@@ -877,12 +1146,26 @@ class Scheduler:
 
     def _activate(self, si: int, slot: _Slot, req: Request, ids: List[int],
                   first) -> None:
-        """Common post-prefill slot activation + the one admission sync."""
+        """Common post-prefill slot activation + the one admission sync.
+
+        A preempt-resume (``req._pre_gen``) re-enters here with ``ids`` =
+        original prompt + pre-generated tokens; ``prompt_len`` stays the
+        *original* prompt length so the in-jit sample-count math
+        (``cnts = cache_len - prompt_len + 1``) continues the RNG chain at
+        exactly the token index the preemption interrupted."""
+        pre = req._pre_gen or []
         slot.request = req
         slot.cache_len = len(ids)
-        slot.prompt_len = len(ids)
-        slot.remaining = req.max_new_tokens - 1
-        slot.generated = [int(first)]                     # one host sync
+        slot.prompt_len = len(ids) - len(pre)
+        slot.remaining = req.max_new_tokens - len(pre) - 1
+        slot.generated = list(pre) + [int(first)]         # one host sync
+        if pre:
+            self._preempt_resumes += 1
+        else:
+            req._orig_plen = len(ids)
+        req._pre_gen = None
+        if req.first_token_s == 0.0:
+            req.first_token_s = time.perf_counter() - req._submit_t
         req.status = "running"
         self._arm_spec(slot, ids)
         self._slot_consts = None        # slot membership changed
@@ -922,7 +1205,7 @@ class Scheduler:
         use_tail = (tail_len > len(shared) * ps and sess.tail_page >= 0
                     and len(shared) == tail_len // ps)
         prefix_len = tail_len if use_tail else len(shared) * ps
-        total_pages = -(-min(len(ids) + req.max_new_tokens + 1,
+        total_pages = -(-min(len(ids) + self._req_budget(req) + 1,
                              self.capacity) // ps)
         if total_pages > self.kvpool.num_pages - self.kvpool.reserved:
             # can NEVER fit, even with every page free: dead-letter instead
@@ -1102,7 +1385,9 @@ class Scheduler:
         first sampled token; decode/verify commits extend it)."""
         if not self.spec:
             return
-        slot.drafter = NgramDrafter(ids + slot.generated,
+        # ids + the newly sampled token; a preempt-resume's pre-generated
+        # tokens are already inside ids, so index only the last sample
+        slot.drafter = NgramDrafter(ids + slot.generated[-1:],
                                     n_min=self.engine_cfg.spec_ngram_min,
                                     n_max=self.engine_cfg.spec_ngram_max)
         slot.spec_on = True
@@ -1183,6 +1468,8 @@ class Scheduler:
                     # is still free for the next candidate
                     self._queue.remove(req)
                     self._finish_abort(req, "failed", e)
+                    if isinstance(e, DeadLetterError):
+                        self._breaker_note(False)
                     continue
                 if not admitted:
                     req._admit_attempts += 1
@@ -1247,8 +1534,11 @@ class Scheduler:
         req.output_tokens = len(slot.generated)
         req.output_text = self.tokenizer.decode(slot.generated)
         req.latency_s = time.perf_counter() - req._submit_t
-        all_tokens = (slot.token_ids if slot.token_ids is not None
-                      else []) + slot.generated
+        # token_ids[:prompt_len] is the admitted prompt; for a preempt-
+        # resumed slot token_ids additionally carries the re-prefilled
+        # pre-generated tokens, which slot.generated already repeats
+        all_tokens = (slot.token_ids[:slot.prompt_len]
+                      if slot.token_ids is not None else []) + slot.generated
         # positions the cache truly covers for the *trimmed* output (the
         # final generated token is sampled but never processed; a stop trim
         # shrinks this below slot.cache_len)
@@ -1329,6 +1619,7 @@ class Scheduler:
                                 sess.turns)
         req.status = "completed"
         req.finished = True
+        self._note_service(req)
         self.slots[si] = _Slot()
 
     # ---- speculative decode pass -------------------------------------------
@@ -1411,6 +1702,7 @@ class Scheduler:
             k, bt)
         # the ONE host sync of the verify step
         out_tok, out_len = jax.device_get((out_tok, out_len))
+        self._breaker_note(True)
         self._decode_syncs += 1
         self._verify_steps += 1
         dt = time.perf_counter() - t0
@@ -1480,12 +1772,19 @@ class Scheduler:
             req = self.slots[si].request
             self._release_slot(si)
             self._finish_abort(req, "failed", exc)
+        if isinstance(exc, DeadLetterError):
+            self._breaker_note(False)
 
     def step(self):
-        """One engine iteration: expire deadlines, admit, then one
-        speculative verify pass for slots with drafts (when spec is on)
-        and/or one chunked decode for the rest."""
+        """One engine iteration: expire deadlines, run the overload policy
+        (shed sweep + priority preemption at this chunk boundary), admit,
+        then one speculative verify pass for slots with drafts (when spec
+        is on) and/or one chunked decode for the rest."""
         self._expire_deadlines()
+        if self.overload is not None:
+            now = time.perf_counter()
+            self._shed_sweep(now)
+            self._preempt_for_priority(now)
         self._admit()
         active = self._active()
         if not active:
@@ -1558,6 +1857,7 @@ class Scheduler:
             # chunk — queued requests and the next step's admissions go on
             self._fail_slots(rest, e)
             return True
+        self._breaker_note(True)
         self._decode_syncs += 1
         self._decode_chunks += 1
         dt = time.perf_counter() - t0

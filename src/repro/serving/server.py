@@ -15,7 +15,7 @@ incrementally off the engine's per-chunk host sync, and any handle can be
         print(piece, end="")
     text = h.result()                 # or just block for the full output
 
-Concurrency model: the server is cooperative, not threaded. ``submit`` only
+Concurrency model: by default the server is cooperative. ``submit`` only
 queues; ``step()`` runs ONE engine iteration (admission + one decode chunk /
 verify pass for every live slot) and distributes freshly decoded text to the
 live handles. ``handle.stream()`` / ``handle.result()`` pump ``step()``
@@ -24,6 +24,20 @@ is drained co-batch inside the same engine steps, which is exactly how N
 concurrent agent workflows share one model (``stats()
 ["active_slots_per_step"]`` measures it; benchmarks/session_bench.py gates
 on it).
+
+Always-on mode: ``LLMServer(cfg, pump=True)`` starts a background pump
+(serving/pump.py) — a daemon thread that owns the engine loop. ``submit`` /
+``cancel`` / session calls become thread-safe (they route through the
+pump's command queue and run on the pump thread), handle streams block on
+the pump's progress signal instead of stepping, and a wedged pump surfaces
+as a typed ``PumpStalledError`` to whoever is waiting. Shut it down with
+``server.close()`` or a ``with LLMServer(...) as server:`` block.
+
+Overload control: pass ``overload=OverloadPolicy(...)`` to bound the
+admission queue (typed ``OverloadError`` to submitters), shed queued
+requests that cannot meet their deadline (terminal status ``"shed"``), and
+preempt running low-priority decodes under admission pressure — preempted
+requests resume bit-identically. See scheduler.OverloadPolicy.
 
 Multi-turn reuse: a ``Session`` tracks its conversation; when turn N+1's
 prompt extends turn N's text, the engine restores the retained tail state
@@ -35,20 +49,46 @@ mechanics and docs/serving.md for the full reference.
 from __future__ import annotations
 
 import collections
+import enum
 from typing import Dict, Iterator, List, Optional, Union
 
 from repro.serving.faults import (CorruptionError, DeadLetterError,
                                   DeadlineExceeded, FaultError, FaultInjector,
+                                  OverloadError, PumpStalledError,
                                   RequestFault, RequestStatus, RetryPolicy,
-                                  TransientFault)
+                                  ShedError, TransientFault)
 from repro.serving.journal import SessionJournal
-from repro.serving.scheduler import (EngineConfig, Request, SamplingParams,
-                                     Scheduler)
+from repro.serving.pump import BackgroundPump, PumpConfig
+from repro.serving.scheduler import (EngineConfig, OverloadPolicy, Request,
+                                     SamplingParams, Scheduler)
 
-__all__ = ["LLMServer", "Session", "Handle", "SamplingParams", "EngineConfig",
-           "RequestStatus", "RetryPolicy", "FaultInjector", "SessionJournal",
-           "FaultError", "TransientFault", "RequestFault", "CorruptionError",
-           "DeadlineExceeded", "DeadLetterError"]
+__all__ = ["LLMServer", "Session", "Handle", "StepOutcome", "SamplingParams",
+           "EngineConfig", "OverloadPolicy", "PumpConfig", "RequestStatus",
+           "RetryPolicy", "FaultInjector", "SessionJournal", "FaultError",
+           "TransientFault", "RequestFault", "CorruptionError",
+           "DeadlineExceeded", "DeadLetterError", "OverloadError",
+           "ShedError", "PumpStalledError"]
+
+
+class StepOutcome(enum.Enum):
+    """Tri-state result of ``LLMServer.step()``.
+
+    PROGRESSED — the engine ran work (a decode chunk / verify / admission).
+    WAITING    — nothing could advance, but queued work exists (every queued
+                 request is in admission backoff; the engine already slept
+                 toward the earliest retry, so a ``while server.step():``
+                 loop cannot busy-spin).
+    IDLE       — no queued and no running work.
+
+    Truthiness preserves the old ``bool`` contract: IDLE is falsy,
+    everything else truthy.
+    """
+    PROGRESSED = "progressed"
+    WAITING = "waiting"
+    IDLE = "idle"
+
+    def __bool__(self) -> bool:
+        return self is not StepOutcome.IDLE
 
 
 def _utf8_holdback(ids: List[int]) -> int:
@@ -74,10 +114,12 @@ class Handle:
 
     ``status()`` is a ``RequestStatus`` (serving/faults.py): ``QUEUED`` or
     ``RUNNING`` while live, then exactly one terminal state — ``COMPLETED``,
-    ``CANCELLED``, ``TIMED_OUT`` (deadline elapsed), or ``FAILED``
+    ``CANCELLED``, ``TIMED_OUT`` (deadline elapsed), ``FAILED``
     (dead-lettered after a non-transient fault; ``exception()`` has the
-    error). ``text`` is everything streamed so far; after completion it
-    equals ``result()`` (stop-trimmed).
+    error), or ``SHED`` (dropped by the overload policy before running).
+    ``text`` is everything streamed so far; after completion it equals
+    ``result()`` (stop-trimmed). A preempted request transiently reports
+    ``QUEUED`` again until its bit-identical resumption.
     """
 
     def __init__(self, server: "LLMServer", request: Request):
@@ -101,24 +143,34 @@ class Handle:
 
     def stream(self) -> Iterator[str]:
         """Yield detokenized text increments as they decode (one per engine
-        chunk that emitted new text for this request). Pumps the server
-        between yields, so concurrently submitted handles keep decoding —
-        their increments buffer in their own handles."""
+        chunk that emitted new text for this request). Cooperative servers
+        pump ``step()`` between yields, so concurrently submitted handles
+        keep decoding — their increments buffer in their own handles. With
+        a background pump this blocks on the pump's progress signal instead
+        (and raises ``PumpStalledError`` if the pump wedges or dies)."""
         while True:
             while self._pending:
                 yield self._pending.popleft()
             if self.request.finished:
                 return
-            self._server.step()
+            self._server._advance()
+
+    def wait(self) -> "Handle":
+        """Block until the request reaches a terminal status (without
+        consuming the stream — increments stay buffered); returns self."""
+        while not self.request.finished:
+            self._server._advance()
+        return self
 
     def result(self) -> str:
-        """Block (cooperatively) until the request finishes; returns the
-        full output text. A cancelled or timed-out handle returns its
-        partial output (the deadline is a budget, not an error; the cause
-        stays on ``exception()``). A FAILED handle re-raises its error."""
+        """Block (cooperatively, or on the pump) until the request
+        finishes; returns the full output text. A cancelled or timed-out
+        handle returns its partial output (the deadline is a budget, not an
+        error; the cause stays on ``exception()``). A FAILED or SHED handle
+        re-raises its error."""
         for _ in self.stream():
             pass
-        if self.request.status == "failed":
+        if self.request.status in ("failed", "shed"):
             raise self.request.error
         return self.request.output_text
 
@@ -173,14 +225,24 @@ class Session:
 
     def close(self):
         """Release the session's retained tail state (pages / snapshot /
-        radix pins); cancels a still-running turn."""
+        radix pins); cancels a still-running turn. Thread-safe under a
+        background pump (routed to the pump thread)."""
         if not self.closed:
-            self._server.engine.close_session(self.sid)
+            self._server._call(
+                lambda: self._server.engine.close_session(self.sid))
             self.closed = True
 
 
 class LLMServer:
-    """Session-oriented continuous-batching server over the scheduler."""
+    """Session-oriented continuous-batching server over the scheduler.
+
+    ``pump=True`` (or a ``PumpConfig``) starts the background pump: the
+    engine loop runs on a daemon thread, the submit/cancel/session surface
+    becomes thread-safe, and the server must be shut down via ``close()``
+    or a ``with`` block. ``overload=OverloadPolicy(...)`` enables bounded
+    admission, load shedding, the dispatch circuit breaker, and priority
+    preemption (see scheduler.py).
+    """
 
     def __init__(self, cfg, *, num_slots: int = 4, capacity: int = 512,
                  params=None, seed: int = 0,
@@ -189,14 +251,66 @@ class LLMServer:
                  default_deadline_s: Optional[float] = None,
                  injector: Optional[FaultInjector] = None,
                  journal_path: Optional[str] = None,
-                 watchdog_s: Optional[float] = None):
+                 watchdog_s: Optional[float] = None,
+                 overload: Optional[OverloadPolicy] = None,
+                 pump: Union[bool, PumpConfig, None] = None):
         self.engine = Scheduler(cfg, num_slots=num_slots, capacity=capacity,
                                 params=params, seed=seed,
                                 engine_cfg=engine_cfg, retry=retry,
                                 default_deadline_s=default_deadline_s,
                                 injector=injector, journal_path=journal_path,
-                                watchdog_s=watchdog_s)
+                                watchdog_s=watchdog_s, overload=overload)
         self._handles: "dict[int, Handle]" = {}       # rid -> live handle
+        self._pump: Optional[BackgroundPump] = None
+        if pump:
+            self._pump = BackgroundPump(
+                self, pump if isinstance(pump, PumpConfig) else None)
+            self._pump.start()
+
+    # ---- pump plumbing -----------------------------------------------------
+    @property
+    def pumping(self) -> bool:
+        """True while the background pump owns the engine loop."""
+        return self._pump is not None and self._pump.alive
+
+    def _call(self, fn):
+        """Run ``fn`` on whichever thread owns the engine: inline when
+        cooperative (or already on the pump thread), else through the
+        pump's command queue. A dead pump (crashed) no longer owns the
+        engine, so post-mortem reads run inline."""
+        if self._pump is not None and self._pump.alive:
+            return self._pump.call(fn)
+        return fn()
+
+    def _advance(self):
+        """Make progress observable to a blocked waiter: one cooperative
+        ``step()``, or a bounded wait on the pump's progress signal."""
+        if self._pump is not None:
+            self._pump.wait_progress()
+        else:
+            self.step()
+
+    def close(self, drain: bool = False):
+        """Shut the server down. With a pump: stop it — outstanding
+        requests are cancelled on the pump thread first (``drain=True``
+        finishes them instead), so nothing is stranded. Cooperative servers
+        just cancel (or drain) outstanding handles."""
+        if self._pump is not None:
+            self._pump.close(drain=drain)
+            self._pump = None
+            return
+        if drain:
+            self.run_until_idle()
+        for h in list(self._handles.values()):
+            if not h.request.finished:
+                self.engine.cancel(h.request)
+        self._deliver()
+
+    def __enter__(self) -> "LLMServer":
+        return self
+
+    def __exit__(self, *exc_info):
+        self.close()
 
     # convenient passthroughs
     @property
@@ -208,7 +322,14 @@ class LLMServer:
         return self.engine.capacity
 
     def stats(self) -> dict:
-        return self.engine.stats()
+        out = self._call(self.engine.stats)
+        if self._pump is not None:
+            out.update({
+                "pump_alive": self._pump.alive,
+                "pump_steps": self._pump.steps,
+                "pump_stall_notices": self._pump.stall_notices,
+            })
+        return out
 
     @property
     def journal(self) -> SessionJournal:
@@ -220,7 +341,7 @@ class LLMServer:
 
     # ---- sessions / submission ---------------------------------------------
     def open_session(self) -> Session:
-        return Session(self, self.engine.open_session())
+        return Session(self, self._call(self.engine.open_session))
 
     def restore_sessions(self, journal: Union[SessionJournal, str]
                          ) -> Dict[int, Session]:
@@ -232,43 +353,74 @@ class LLMServer:
         server. Returns {old session id -> new live Session}."""
         if isinstance(journal, str):
             journal = SessionJournal.load(journal)
-        restored: Dict[int, Session] = {}
-        for entry in journal.entries():
-            sid = self.engine.restore_session(entry)
-            restored[entry.sid] = Session(self, sid)
-        return restored
+
+        def _restore():
+            restored: Dict[int, Session] = {}
+            for entry in journal.entries():
+                sid = self.engine.restore_session(entry)
+                restored[entry.sid] = Session(self, sid)
+            return restored
+        return self._call(_restore)
 
     def submit(self, prompt: str, params: Optional[SamplingParams] = None,
                *, session: Optional[int] = None,
                token_ids: Optional[List[int]] = None) -> Handle:
-        """Queue a request (non-blocking) and return its handle. Nothing
-        runs until someone pumps ``step()`` — usually via
-        ``handle.stream()`` / ``handle.result()`` — so handles submitted
-        together co-batch."""
-        req = self.engine.enqueue(prompt, params, session=session,
-                                  token_ids=token_ids)
-        h = Handle(self, req)
-        self._handles[req.rid] = h
-        return h
+        """Queue a request (non-blocking) and return its handle. On a
+        cooperative server nothing runs until someone pumps ``step()`` —
+        usually via ``handle.stream()`` / ``handle.result()`` — so handles
+        submitted together co-batch. With a background pump the submit is
+        thread-safe (it runs on the pump thread between engine steps, so a
+        burst of submits from many threads still lands in one admission
+        round) and decoding starts immediately. Raises ``OverloadError``
+        when the overload policy refuses admission."""
+        def _submit():
+            req = self.engine.enqueue(prompt, params, session=session,
+                                      token_ids=token_ids)
+            h = Handle(self, req)
+            self._handles[req.rid] = h
+            return h
+        return self._call(_submit)
 
     def cancel(self, handle: Handle) -> bool:
         """Cancel a queued or running handle: its slot, private KV pages,
         and radix pins are released immediately; the handle keeps whatever
-        partial text was already decoded."""
-        ok = self.engine.cancel(handle.request)
-        self._deliver()
-        return ok
+        partial text was already decoded. Thread-safe under a pump."""
+        def _cancel():
+            ok = self.engine.cancel(handle.request)
+            self._deliver()
+            return ok
+        return self._call(_cancel)
 
-    # ---- the cooperative pump ----------------------------------------------
-    def step(self) -> bool:
+    # ---- the step loop -----------------------------------------------------
+    def step(self) -> StepOutcome:
         """One engine iteration for ALL live requests, then deliver newly
-        decoded text to their handles. Returns True while there is work."""
+        decoded text to their handles. Returns a ``StepOutcome`` (truthy
+        while there is work — see the enum; existing ``while step():``
+        loops keep working). With a background pump running, the pump owns
+        the loop: calling this from another thread raises."""
+        if self.pumping:
+            raise RuntimeError(
+                "the background pump owns the step loop; wait on handles "
+                "(stream()/result()) or run_until_idle() instead")
+        return self._step_impl()
+
+    def _step_impl(self) -> StepOutcome:
         progressed = self.engine.step()
         self._deliver()
-        return progressed or bool(self.engine._queue)
+        if progressed:
+            return StepOutcome.PROGRESSED
+        # queue non-empty with no progress => every queued request is in
+        # admission backoff; engine.step() already slept toward the
+        # earliest retry, so WAITING loops are back-pressured, not busy
+        return (StepOutcome.WAITING if self.engine._queue
+                else StepOutcome.IDLE)
 
     def run_until_idle(self):
-        """Drain everything currently queued or running."""
+        """Drain everything currently queued or running (blocks on the
+        pump when one is running)."""
+        if self._pump is not None:
+            self._pump.wait_idle()
+            return
         while self.step():
             pass
 

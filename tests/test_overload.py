@@ -1,0 +1,370 @@
+"""Overload control (OverloadPolicy on the Scheduler): bounded admission,
+load shedding, the dispatch circuit breaker, and priority preemption.
+
+Acceptance invariants (ISSUE 8): refusals and sheds are TYPED
+(``OverloadError`` / ``ShedError``), never silent drops or stranded
+handles; preemption happens only for strictly higher priority and the
+preempted request resumes **bit-identically** (same tokens, same RNG
+chain) across dense / paged / snapshot cache modes; and random
+multi-threaded submit / cancel / preempt interleavings against a pumping
+server preserve exactly-once page ownership.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.serving.faults import OverloadError, ShedError
+from repro.serving.scheduler import OverloadPolicy
+from repro.serving.server import (EngineConfig, FaultInjector, LLMServer,
+                                  RetryPolicy, SamplingParams)
+
+from tests._hypothesis_compat import given, settings, st
+
+
+def _cfg(arch):
+    return ARCHS[arch].reduced(dtype="float32", param_dtype="float32",
+                               vocab_size=512)
+
+
+def _sp(max_new=8, priority=0, **kw):
+    return SamplingParams(max_new_tokens=max_new, priority=priority, **kw)
+
+
+# ---------------------------------------------------------------------------
+# bounded admission: depth caps, displacement, age caps, predictive shed
+# ---------------------------------------------------------------------------
+
+def test_queue_depth_cap_and_priority_displacement():
+    """A full admission queue refuses equal-or-lower arrivals typed, but a
+    HIGHER-priority arrival displaces the youngest lower-priority queued
+    request (typed ShedError on the victim) instead of being refused."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=64,
+                    overload=OverloadPolicy(max_queue_depth=3))
+    lows = [srv.submit(f"low {i}", _sp()) for i in range(3)]   # queue full
+    with pytest.raises(OverloadError, match="queue full"):
+        srv.submit("low overflow", _sp())
+    hi = srv.submit("urgent", _sp(priority=2))                 # displaces
+    victim = lows[-1]                            # youngest low-priority
+    assert victim.status().value == "shed"
+    assert isinstance(victim.request.error, ShedError)
+    assert victim.request.finished
+    srv.run_until_idle()
+    assert hi.status().value == "completed"
+    assert all(h.request.finished for h in lows)
+    st = srv.stats()
+    assert st["shed_requests"] == 1
+    assert st["queued_requests"] == 0 and st["live_requests"] == 0
+    srv.close()
+
+
+def test_per_class_depth_cap():
+    """class_depth bounds one priority class without touching others."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=64,
+                    overload=OverloadPolicy(class_depth={0: 2}))
+    for i in range(2):
+        srv.submit(f"batch {i}", _sp())
+    with pytest.raises(OverloadError, match="class"):
+        srv.submit("batch 2", _sp())
+    hi = srv.submit("interactive", _sp(priority=1))   # class 1: unbounded
+    srv.run_until_idle()
+    assert hi.status().value == "completed"
+    srv.close()
+
+
+def test_queue_age_cap_sheds_stale_requests():
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=128,
+                    engine_cfg=EngineConfig(decode_chunk=2),
+                    overload=OverloadPolicy(max_queue_age_s=0.05))
+    runner = srv.submit("long running job " * 3, _sp(max_new=32))
+    while runner.status().value != "running":
+        srv.step()
+    stale = srv.submit("will go stale", _sp())
+    time.sleep(0.1)                                  # exceed the age cap
+    srv.step()                                       # sweep runs first
+    assert stale.status().value == "shed"
+    assert isinstance(stale.request.error, ShedError)
+    assert "age cap" in str(stale.request.error)
+    srv.run_until_idle()
+    assert runner.status().value == "completed"
+    srv.close()
+
+
+def test_predictive_deadline_shed():
+    """With EWMA service-time data, a queued request whose remaining
+    deadline cannot cover its predicted service time is shed immediately
+    (typed) instead of burning a slot to time out anyway."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=128,
+                    engine_cfg=EngineConfig(decode_chunk=2),
+                    overload=OverloadPolicy(shed_on_deadline=True))
+    eng = srv.engine
+    eng._svc_decode_tok_s = 10.0                     # 8 tokens -> eta 80s
+    runner = srv.submit("long running job " * 3, _sp(max_new=32))
+    while runner.status().value != "running":
+        srv.step()
+    doomed = srv.submit("tight deadline", _sp(deadline_s=5.0))
+    srv.step()
+    assert doomed.status().value == "shed"
+    assert "predicted service time" in str(doomed.request.error)
+    srv.run_until_idle()
+    assert runner.status().value == "completed"
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker over dispatch dead-letters
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_after_consecutive_dead_letters_and_cools():
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=64,
+                    overload=OverloadPolicy(breaker_threshold=3,
+                                            breaker_cooldown_s=0.1))
+    eng = srv.engine
+    for _ in range(2):
+        eng._breaker_note(False)
+    eng._breaker_note(True)                          # success resets streak
+    for _ in range(3):
+        eng._breaker_note(False)                     # threshold -> open
+    assert srv.stats()["breaker_trips"] == 1
+    assert srv.stats()["breaker_open"] is True
+    with pytest.raises(OverloadError, match="breaker"):
+        srv.submit("refused", _sp())
+    time.sleep(0.12)                                 # cooldown elapses
+    h = srv.submit("admitted again", _sp())
+    srv.run_until_idle()
+    assert h.status().value == "completed"
+    srv.close()
+
+
+def test_breaker_integration_with_injected_dead_letters():
+    """Real dead-letters (seeded FaultInjector, no retry headroom) drive
+    the breaker: repeated dispatch failures open it, and submits during
+    the cooldown are refused typed."""
+    inj = FaultInjector(seed=0)
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=64,
+                    injector=inj, retry=RetryPolicy(max_attempts=1),
+                    overload=OverloadPolicy(breaker_threshold=2,
+                                            breaker_cooldown_s=5.0))
+    inj.fail_next("decode", 2)
+    h1 = srv.submit("first doomed", _sp())
+    srv.run_until_idle()
+    h2 = srv.submit("second doomed", _sp())
+    srv.run_until_idle()
+    assert h1.status().value == "failed" and h2.status().value == "failed"
+    assert srv.stats()["breaker_trips"] == 1
+    with pytest.raises(OverloadError, match="breaker"):
+        srv.submit("refused while open", _sp())
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# priority preemption: bit-identical resume across cache modes
+# ---------------------------------------------------------------------------
+
+MODES = [("qwen2.5-3b", "dense"), ("qwen2.5-3b", "paged"),
+         ("recurrentgemma-9b", "paged")]
+
+
+@pytest.mark.parametrize("arch,mode", MODES)
+def test_preempt_resume_bit_identical(arch, mode):
+    """A running low-priority decode preempted at the chunk boundary and
+    resumed later must emit EXACTLY the uninterrupted output — same
+    tokens and the same per-request RNG chain (temperature > 0: resume
+    continues sampling at fold_in(key, k), not a fresh chain)."""
+    cfg = _cfg(arch)
+    ecfg = EngineConfig(cache_mode=mode, page_size=8, decode_chunk=2)
+    lo_sp = _sp(max_new=24, temperature=0.7)
+    ref_srv = LLMServer(cfg, num_slots=1, capacity=128, seed=7,
+                        engine_cfg=ecfg)
+    ref = ref_srv.submit("a long low priority ramble ", lo_sp)
+    ref_srv.run_until_idle()
+    ref_out = ref.result()
+    params = ref_srv.params
+    ref_srv.close()
+
+    srv = LLMServer(cfg, num_slots=1, capacity=128, seed=7, params=params,
+                    engine_cfg=ecfg, overload=OverloadPolicy(preempt=True))
+    lo = srv.submit("a long low priority ramble ", lo_sp)    # same rid
+    while lo.status().value != "running":
+        srv.step()
+    srv.step()
+    hi = srv.submit("urgent", _sp(priority=5, temperature=0.7))
+    srv.run_until_idle()
+    assert lo.request.preempted >= 1, (arch, mode)
+    assert hi.status().value == "completed"
+    assert lo.status().value == "completed"
+    assert lo.result() == ref_out, (arch, mode)
+    st = srv.stats()
+    assert st["preemptions"] >= 1 and st["preempt_resumes"] >= 1
+    assert st["queued_requests"] == 0 and st["live_requests"] == 0
+    eng = srv.engine
+    if mode == "paged" and arch == "qwen2.5-3b":
+        owned = eng.radix.check_invariants()
+        free = set(eng.kvpool._free)
+        assert not (owned & free)
+        assert (len(owned) + len(free)
+                == eng.kvpool.num_pages - eng.kvpool.reserved)
+    srv.close()
+
+
+def test_preempt_only_strictly_higher_priority():
+    """Equal priority never preempts: FIFO within a class stays FIFO."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=128,
+                    engine_cfg=EngineConfig(decode_chunk=2),
+                    overload=OverloadPolicy(preempt=True))
+    first = srv.submit("first in class " * 2, _sp(max_new=16, priority=1))
+    while first.status().value != "running":
+        srv.step()
+    second = srv.submit("second in class", _sp(priority=1))
+    srv.run_until_idle()
+    assert first.request.preempted == 0
+    assert srv.stats()["preemptions"] == 0
+    assert (first.status().value == second.status().value == "completed")
+    srv.close()
+
+
+def test_preempted_stream_stays_monotonic():
+    """A handle mid-stream across a preempt/resume sees its text grow
+    monotonically — no rewind, no duplicated chunk."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=128,
+                    engine_cfg=EngineConfig(decode_chunk=2),
+                    overload=OverloadPolicy(preempt=True))
+    lo = srv.submit("streaming ramble " * 2, _sp(max_new=24))
+    while lo.status().value != "running":
+        srv.step()
+    srv.step()
+    hi = srv.submit("urgent", _sp(priority=5))
+    seen = ""
+    for chunk in lo.stream():
+        seen += chunk
+    assert lo.request.preempted >= 1
+    # no rewind, no duplicated chunk across the preempt/resume boundary:
+    # the streamed increments concatenate to exactly the final output
+    assert seen == lo.request.output_text
+    assert hi.status().value == "completed"
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: threaded submit / cancel / preempt interleavings vs a pumping
+# server preserve exactly-once page ownership
+# ---------------------------------------------------------------------------
+
+_LOAD_SRV = None
+
+
+def _load_server():
+    global _LOAD_SRV
+    if _LOAD_SRV is None:
+        # tiny pool (eviction pressure) + spec (rejection pressure) + tiny
+        # chunks (many preempt windows) + tight queue (shed pressure),
+        # driven through the background pump from racing client threads
+        _LOAD_SRV = LLMServer(
+            _cfg("qwen2.5-3b"), num_slots=2, capacity=64,
+            engine_cfg=EngineConfig(cache_mode="paged", page_size=8,
+                                    num_pages=18, spec_len=4,
+                                    decode_chunk=2),
+            overload=OverloadPolicy(max_queue_depth=4, preempt=True),
+            pump=True)
+    return _LOAD_SRV
+
+
+def _run_threaded_ops(ops):
+    """Fire submit(lo) / submit(hi) / submit-then-cancel / pause ops from
+    three racing client threads at a pumping, overloadable server
+    (displacement sheds + chunk-boundary preemptions + draft rejections +
+    LRU eviction all active): after the drain, every page must be owned
+    exactly once — free list or radix tree — and every handle terminal."""
+    srv = _load_server()
+    pool = ["err 429 err 429 err 429. " + t for t in
+            ("", "tail one", "go go go go go", "a longer tail that repeats")]
+    handles, lock = [], threading.Lock()
+
+    def client(shard):
+        for kind, variant, budget in shard:
+            try:
+                if kind == 0:                      # low-priority submit
+                    h = srv.submit(pool[variant], _sp(max_new=budget))
+                elif kind == 1:                    # high-priority submit
+                    h = srv.submit(pool[variant],
+                                   _sp(max_new=budget, priority=2))
+                elif kind == 2:                    # submit then racy cancel
+                    h = srv.submit(pool[variant], _sp(max_new=budget))
+                    srv.cancel(h)
+                else:
+                    time.sleep(0.002)
+                    continue
+            except OverloadError:
+                continue                           # typed refusal is fine
+            with lock:
+                handles.append(h)
+
+    shards = [[op[1:] for op in ops if op[0] == t] for t in range(3)]
+    threads = [threading.Thread(target=client, args=(s,)) for s in shards]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    srv.run_until_idle()
+    assert all(h.request.finished for h in handles)
+    terminal = {"completed", "cancelled", "timed_out", "failed", "shed"}
+    assert all(h.request.status in terminal for h in handles)
+    eng = srv.engine
+    assert not eng._queue and all(s.request is None for s in eng.slots)
+    owned = eng.radix.check_invariants()
+    free = set(eng.kvpool._free)
+    assert not (owned & free)
+    assert len(owned) + len(free) == eng.kvpool.num_pages - eng.kvpool.reserved
+
+
+@given(st.lists(st.tuples(st.integers(0, 2),      # client thread
+                          st.integers(0, 3),      # op kind
+                          st.integers(0, 3),      # prompt variant
+                          st.integers(2, 12)),    # token budget
+                min_size=4, max_size=12))
+@settings(max_examples=15, deadline=None)
+def test_threaded_interleavings_exactly_once_ownership(ops):
+    _run_threaded_ops(ops)
+
+
+def test_threaded_interleavings_fixed_script():
+    """Deterministic stand-in for the hypothesis sweep (which needs the
+    hypothesis package): a dense script mixing all op kinds across the
+    three client threads."""
+    _run_threaded_ops([(t, k, (t + k) % 4, 3 + 2 * k)
+                       for t in range(3) for k in range(4)])
+
+
+def test_threaded_snapshot_ownership():
+    """The snapshot-arena twin of the page test on a stateful arch: racing
+    submits/cancels with preemption active never leak or double-free a
+    state snapshot."""
+    srv = LLMServer(
+        _cfg("recurrentgemma-9b"), num_slots=2, capacity=64,
+        engine_cfg=EngineConfig(cache_mode="paged", decode_chunk=2),
+        overload=OverloadPolicy(max_queue_depth=4, preempt=True),
+        pump=True)
+    with srv:
+        def client(i):
+            for j in range(3):
+                try:
+                    h = srv.submit(f"stateful {i} turn {j} " * 2,
+                                   _sp(max_new=6, priority=j % 2))
+                except OverloadError:
+                    continue
+                if (i + j) % 3 == 0:
+                    srv.cancel(h)
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        srv.run_until_idle()
+        eng = srv.engine
+        assert not eng._queue and all(s.request is None for s in eng.slots)
+        owned = eng.radix.check_invariants(snapshots=True)
+        free = set(eng.snaps._free)
+        assert not (owned & free)
+        assert len(owned) + len(free) == eng.snaps.num_snaps

@@ -1,0 +1,173 @@
+"""Background pump (repro.serving.pump): the always-on serving loop.
+
+Acceptance invariant (ISSUE 8): seeded outputs through a pumping server are
+bit-identical to the cooperative ``step()`` loop across dense / paged /
+snapshot cache modes — the pump changes WHO drives, never WHAT runs. Plus
+lifecycle (close cancels, context manager, step() ownership), thread-safe
+submission from many threads, and the typed crash/stall surface.
+"""
+import threading
+
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.serving.server import (EngineConfig, LLMServer, PumpConfig,
+                                  PumpStalledError, SamplingParams,
+                                  StepOutcome)
+
+
+def _cfg(arch):
+    return ARCHS[arch].reduced(dtype="float32", param_dtype="float32",
+                               vocab_size=512)
+
+
+MODES = [("qwen2.5-3b", "dense"), ("qwen2.5-3b", "paged"),
+         ("recurrentgemma-9b", "paged")]          # paged resolves: pages/snaps
+
+PROMPTS = ["alpha prompt for slot one",
+           "a rather longer second prompt that crosses a bucket",
+           "third prompt"]
+
+
+@pytest.mark.parametrize("arch,mode", MODES)
+def test_pump_bit_identical_to_cooperative(arch, mode):
+    """Same weights, same seed, same submits: the pump thread must produce
+    exactly the cooperative loop's outputs (temperature > 0 so the
+    per-request RNG chains are exercised, not just argmax)."""
+    cfg = _cfg(arch)
+    ecfg = EngineConfig(cache_mode=mode, page_size=16)
+    sp = SamplingParams(max_new_tokens=8, temperature=0.7)
+    coop = LLMServer(cfg, num_slots=3, capacity=128, seed=3, engine_cfg=ecfg)
+    hs = [coop.submit(p, sp) for p in PROMPTS]
+    coop.run_until_idle()
+    ref = [h.result() for h in hs]
+    params = coop.params
+    coop.close()
+
+    with LLMServer(cfg, num_slots=3, capacity=128, seed=3, params=params,
+                   engine_cfg=ecfg, pump=True) as srv:
+        assert srv.pumping
+        hs2 = [srv.submit(p, sp) for p in PROMPTS]
+        assert [h.result() for h in hs2] == ref, (arch, mode)
+        st = srv.stats()
+        assert st["pump_alive"] and st["pump_steps"] > 0
+        assert st["pump_stall_notices"] == 0
+
+
+def test_pump_owns_the_step_loop():
+    """While the pump runs, driving step() from another thread is a
+    programming error (two threads would race the engine) — typed refusal,
+    and run_until_idle() delegates to the pump instead."""
+    with LLMServer(_cfg("qwen2.5-3b"), num_slots=2, capacity=64,
+                   pump=True) as srv:
+        with pytest.raises(RuntimeError, match="pump owns the step loop"):
+            srv.step()
+        h = srv.submit("hello", SamplingParams(max_new_tokens=4))
+        srv.run_until_idle()                      # blocks on the pump
+        assert h.status().value == "completed"
+    # after close the server is cooperative again: step() works
+    assert not srv.pumping
+    assert srv.step() is StepOutcome.IDLE
+
+
+def test_pump_close_cancels_outstanding():
+    """close() without drain= must leave nothing stranded: outstanding
+    requests reach terminal CANCELLED on the pump thread before it exits."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=128,
+                    engine_cfg=EngineConfig(decode_chunk=2), pump=True)
+    hs = [srv.submit(f"long job {i} " * 4,
+                     SamplingParams(max_new_tokens=64)) for i in range(3)]
+    srv.close()
+    assert all(h.request.finished for h in hs)
+    assert any(h.status().value == "cancelled" for h in hs)
+    eng = srv.engine
+    assert not eng._queue and all(s.request is None for s in eng.slots)
+
+
+def test_pump_close_drain_finishes_work():
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=2, capacity=64, pump=True)
+    hs = [srv.submit(p, SamplingParams(max_new_tokens=4)) for p in PROMPTS]
+    srv.close(drain=True)
+    assert all(h.status().value == "completed" for h in hs)
+
+
+def test_pump_threadsafe_submit_many_threads():
+    """Submits racing from many client threads: every request completes,
+    and each prompt's greedy output matches the single-threaded reference
+    (the command queue serializes engine access, so no interleaving can
+    corrupt another request's state)."""
+    cfg = _cfg("qwen2.5-3b")
+    sp = SamplingParams(max_new_tokens=6)
+    coop = LLMServer(cfg, num_slots=4, capacity=128)
+    prompts = [f"client {i} asks question {i % 3} " for i in range(12)]
+    hs = [coop.submit(p, sp) for p in prompts]
+    coop.run_until_idle()
+    ref = {p: h.result() for p, h in zip(prompts, hs)}
+    params = coop.params
+    coop.close()
+
+    with LLMServer(cfg, num_slots=4, capacity=128, params=params,
+                   pump=True) as srv:
+        out = {}
+        lock = threading.Lock()
+
+        def client(shard):
+            for p in shard:
+                r = srv.submit(p, sp).result()
+                with lock:
+                    out[p] = r
+
+        threads = [threading.Thread(target=client, args=(prompts[i::4],))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert out == ref
+
+
+def test_pump_crash_surfaces_typed():
+    """An engine-level crash on the pump thread must not strand waiters:
+    the pump dies, waits raise PumpStalledError (with the cause chained),
+    and post-mortem stats()/state reads still work inline."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=64, pump=True)
+    boom = RuntimeError("injected engine crash")
+
+    def crash():
+        raise boom
+    srv._step_impl = crash
+    h = srv.submit("doomed", SamplingParams(max_new_tokens=4))
+    with pytest.raises(PumpStalledError):
+        h.result()
+    assert not srv.pumping
+    st = srv.stats()                               # inline post-mortem read
+    assert st["pump_alive"] is False
+    srv.close()
+
+
+def test_pump_stall_watchdog():
+    """A wedged pump (heartbeat stops — e.g. a dispatch stuck in jit)
+    surfaces as a typed stall to waiters instead of a silent hang, and the
+    stall is counted in stats."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=64,
+                    pump=PumpConfig(stall_timeout_s=0.2, poll_s=0.02))
+    release = threading.Event()
+    real = srv._step_impl
+
+    def wedged():
+        release.wait(5.0)       # hold the pump thread well past the timeout
+        return real()
+
+    srv._step_impl = wedged
+    h = srv.submit("hello", SamplingParams(max_new_tokens=4))
+    with pytest.raises(PumpStalledError, match="stale"):
+        h.result()
+    assert srv._pump.stall_notices >= 1
+    release.set()               # un-wedge so shutdown is clean
+    srv._step_impl = real
+    pump = srv._pump
+    srv.close()
+    # the short stall_timeout_s also bounds close()'s join — give the
+    # thread real time to leave its final engine step before teardown
+    pump.thread.join(30.0)
+    assert not pump.thread.is_alive()

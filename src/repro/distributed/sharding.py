@@ -10,6 +10,19 @@ Baseline layout (paper-faithful starting point; §Perf iterates from here):
   - batch:      over ("pod","data")
   - KV cache:   sequence-sharded over "model" (decode context parallelism —
                 the softmax/psum combine is handled by SPMD partitioning)
+
+Serving layout (phase="serve"): the serving stack's acceptance bar is
+BIT-IDENTICAL greedy outputs vs single device, which rules out any layout
+that splits a contraction dimension across devices (partial matmuls +
+psum/AllReduce re-associate float sums). The serve rules therefore shard
+only *batch-like* dims (slot/page/snapshot-row batch → "data"; q heads, KV
+heads, expert index → "model" — attention heads and experts are batch dims
+of their einsums) and *output* dims of matmuls whose contraction side stays
+replicated (vocab, mlp-up, rnn-up). Down-projections keep their contraction
+axis replicated via the ``*_in`` weight axes, and the ``*_act`` activation
+keys force an all-gather right before each down-projection so the
+contraction itself runs identically on every device. All-gathers move bits
+but never re-associate sums, so the whole forward pass stays bit-exact.
 """
 from __future__ import annotations
 
@@ -38,22 +51,32 @@ def rules_for(mesh: Mesh, phase: str, *, shard_batch: bool = True,
     multi_pod = "pod" in axes
     fsdp = ("pod", "data") if multi_pod else ("data",)
     batch = fsdp if shard_batch else ()
+    if phase == "serve":
+        return _serve_rules(mesh, batch)
     rules = {
         "phase": phase,
+        "mesh": mesh,
         "batch": batch,
         "cache_batch": batch,
         "fsdp": fsdp,
         "vocab": ("model",),
         "embed": fsdp,
         "heads": ("model",),
+        "heads_in": ("model",),   # wo contraction side (serve: replicated)
+        "heads_act": ("model",),  # attention output pre-wo (serve: gathered)
         "kv_heads": (),
         "head_dim": (),
         "mlp": ("model",),
+        "mlp_in": ("model",),     # dense-MLP wo contraction side
+        "mlp_act": ("model",),    # MLP hidden pre-wo
         "experts": (),
+        "moe_mlp": ("model",),    # MoE wi/wo hidden dim
         "moe_embed": fsdp,
         "moe_tokens": batch,      # xe group dim (default: follow the batch)
         "experts_run": (),        # xe expert dim (EP mode: the fsdp axis)
         "rnn": ("model",),
+        "rnn_in": ("model",),     # RG-LRU wo contraction side
+        "rnn_act": ("model",),    # RG-LRU mixed output pre-wo
         # xLSTM inner dims: replicated over `model` (§Perf iteration 2) —
         # TP of a 2048-wide recurrence over 16 shards made every mLSTM chunk
         # all-gather its state/qkv (45GB/step); a 350M-class recurrent model
@@ -81,6 +104,53 @@ def rules_for(mesh: Mesh, phase: str, *, shard_batch: bool = True,
         rules["experts_run"] = fsdp
         rules["moe_tokens"] = ()
     return rules
+
+
+def _serve_rules(mesh: Mesh, batch) -> dict:
+    """The bit-exact serving layout (see module docstring).
+
+    batch/page/row axes → "data"; per-head and per-expert batch dims plus
+    replicated-contraction output dims (vocab / mlp-up / rnn-up) → "model";
+    every contraction side (embed, ``*_in``) and every pre-down-projection
+    activation (``*_act``) replicated, so no float sum is ever split.
+    """
+    return {
+        "phase": "serve",
+        "mesh": mesh,
+        "batch": batch,
+        "cache_batch": batch,
+        "fsdp": (),
+        "vocab": ("model",),       # unembed output dim; embed-table rows
+        "embed": (),               # every input contraction: replicated
+        "heads": ("model",),       # q heads: a batch dim of attention
+        "heads_in": (),            # wo contracts over heads → replicated
+        "heads_act": (),           # gather attention output before wo
+        "kv_heads": ("model",),    # KV cache / page-pool head dim
+        "head_dim": (),
+        "mlp": ("model",),         # wi/wg output dim (contraction replicated)
+        "mlp_in": (),              # wo contracts over F → replicated
+        "mlp_act": (),             # gather hidden before wo
+        "experts": ("model",),     # expert parallelism: E is a batch dim
+        "moe_mlp": (),             # per-expert F: contracted by MoE wo
+        "moe_embed": (),
+        "moe_tokens": (),
+        "experts_run": ("model",),  # dispatched tokens follow their expert
+        "rnn": ("model",),         # RG-LRU channels: elementwise recurrence
+        "rnn_in": (),              # wo contracts over R → replicated
+        "rnn_act": (),             # gather mixed output before wo
+        # xLSTM / sLSTM inner dims stay replicated (see baseline comment —
+        # and their qkv projections contract over "inner", which a sharded
+        # inner dim would split)
+        "inner": (),
+        "inner_out": (),
+        "slstm_inner": (),
+        "conv": (),
+        "norm": (),
+        "layers": (),
+        "kv_seq": (),              # no sequence parallelism: the softmax
+                                   # combine re-associates sums (not bit-safe)
+        None: (),
+    }
 
 
 def _axes_to_spec(axes: Sequence[Optional[str]], rules: dict) -> P:
@@ -121,19 +191,27 @@ def named(mesh: Mesh, spec_tree):
 def cache_pspecs(cfg, rules: dict):
     """PartitionSpecs mirroring ``transformer.cache_spec`` structurally.
 
-    Attention KV caches [B, W, K, hd] are sequence-sharded over "model";
-    recurrent/mLSTM/sLSTM states shard their channel dim over "model".
+    Every physical axis comes from the rule set: train/decode phases
+    sequence-shard attention KV over "model" and channel-shard recurrent
+    state; the serve phase instead shards the batch axis (slot / page /
+    snapshot row) over "data" and the KV-head / recurrent-channel dims over
+    "model" (both are batch-like — bit-safe). The same specs cover the dense
+    per-slot cache, the paged page pool (batch = pages) and the snapshot
+    arena (batch = rows), which all reuse the cache pytree structure.
     """
     from repro.configs import base as cfgbase
 
     batch = rules.get("cache_batch", rules["batch"])
     b = batch if len(batch) > 1 else (batch[0] if batch else None)
     kv = rules["kv_seq"][0] if rules["kv_seq"] else None
-    ch = "model"
+    kvh = rules.get("kv_heads", ())
+    kvh = kvh[0] if kvh else None
+    rnn = rules.get("rnn", ())
+    ch = rnn[0] if rnn else None
 
     def block_specs(kind, lead):
         if kind in (cfgbase.ATTN, cfgbase.ATTN_MOE, cfgbase.LOCAL_ATTN):
-            s = P(*lead, b, kv, None, None)
+            s = P(*lead, b, kv, kvh, None)
             return {"k": s, "v": s}
         if kind == cfgbase.RECURRENT:
             return {"h": P(*lead, b, ch), "conv": P(*lead, b, None, ch)}
@@ -197,9 +275,56 @@ def use_rules(rules: dict):
 
 
 def constrain(x, *axes):
-    """with_sharding_constraint by logical axes, no-op outside a rules ctx."""
+    """with_sharding_constraint by logical axes, no-op outside a rules ctx.
+
+    Rule sets carry their mesh, so the constraint is a full ``NamedSharding``
+    — usable from any call site (the serving jits run under ``use_rules``
+    with no ambient ``with mesh:`` context manager). Constraints whose spec
+    does not divide the dim are ignored by the partitioner (replicated),
+    which keeps small test configs (e.g. 2 KV heads on a 4-way "model"
+    axis) correct — just unsharded on that dim.
+    """
     rules = current_rules()
     if rules is None:
         return x
     spec = _axes_to_spec(axes, rules)
+    mesh = rules.get("mesh")
+    if mesh is not None:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Committed placement (serving): device_put with divisibility fallback
+# ---------------------------------------------------------------------------
+
+
+def _divisible_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh-axis extent does not divide the dim.
+
+    ``jax.device_put`` (unlike in-jit constraints) refuses uneven shardings;
+    replicating the offending dim preserves values exactly, so a config
+    whose KV heads / slots / pages don't divide the mesh still serves
+    correctly — that dim just stays unsharded.
+    """
+    out = []
+    for i, dim in enumerate(shape):
+        entry = spec[i] if i < len(spec) else None
+        if entry is not None:
+            names = (entry,) if isinstance(entry, str) else tuple(entry)
+            extent = 1
+            for n in names:
+                extent *= mesh.shape[n]
+            if extent == 0 or dim % extent != 0:
+                entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def shard_put(tree, spec_tree, mesh: Mesh):
+    """``device_put`` a pytree with per-leaf ``PartitionSpec``s (same
+    structure), falling back to replication on non-divisible dims."""
+    def _put(x, spec):
+        return jax.device_put(
+            x, NamedSharding(mesh, _divisible_spec(x.shape, spec, mesh)))
+    return jax.tree.map(_put, tree, spec_tree)

@@ -5,6 +5,8 @@ device state (jax locks the device count on first backend init).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
 
@@ -18,6 +20,27 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1×1 mesh over the real local device (CPU tests/examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_test_mesh(shape=(2, 4), axis_names=None):
+    """Small explicit-shape mesh for tests and CPU benchmarks.
+
+    ``make_production_mesh`` hard-codes pod slices (256/512 chips) that can
+    never instantiate on a test host; tests build meshes through this helper
+    instead, under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    Axis names default to the production convention, rightmost-aligned:
+    2 axes → ("data", "model"), 3 axes → ("pod", "data", "model").
+    """
+    if axis_names is None:
+        axis_names = ("pod", "data", "model")[-len(shape):]
+    need = math.prod(shape)
+    have = jax.device_count()
+    if have < need:
+        raise RuntimeError(
+            f"mesh {tuple(shape)} needs {need} devices but the backend has "
+            f"{have}; run under XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={need} (set BEFORE jax initializes)")
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

@@ -36,7 +36,10 @@ def attn_defs(cfg):
         "wq": ParamDef((D, H, hd), ("embed", "heads", "head_dim"), init="scaled"),
         "wk": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
         "wv": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
-        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "embed"), init="scaled"),
+        # wo's head dim is the contraction side of the output projection —
+        # own logical axis so serve can replicate it (bit-exact, see
+        # distributed/sharding.py) while train keeps the Megatron layout
+        "wo": ParamDef((H, hd, D), ("heads_in", "head_dim", "embed"), init="scaled"),
     }
     if cfg.attn_bias:
         d["bq"] = ParamDef((H, hd), ("heads", "head_dim"), init="zeros")
@@ -69,7 +72,9 @@ def qkv_proj(p, x, cfg, positions):
 
 
 def out_proj(p, o):
-    o = constrain(o, "batch", None, "heads", None)
+    # "heads_act": train/decode keep heads sharded (Megatron); serve gathers
+    # them here so the contraction over heads is never split across devices
+    o = constrain(o, "batch", None, "heads_act", None)
     return constrain(jnp.einsum("bshk,hkd->bsd", o, p["wo"]), "batch", None, None)
 
 

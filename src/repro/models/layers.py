@@ -115,7 +115,10 @@ def mlp_defs(cfg):
     D, F = cfg.d_model, cfg.d_ff
     d = {
         "wi": ParamDef((D, F), ("embed", "mlp"), init="scaled"),
-        "wo": ParamDef((F, D), ("mlp", "embed"), init="scaled"),
+        # the contraction side of the down-projection gets its own logical
+        # axis: train/decode shard it over "model" (Megatron layout), serve
+        # replicates it so the contraction is never split (bit-exact)
+        "wo": ParamDef((F, D), ("mlp_in", "embed"), init="scaled"),
     }
     if cfg.gated_mlp:
         d["wg"] = ParamDef((D, F), ("embed", "mlp"), init="scaled")
@@ -140,7 +143,7 @@ def apply_mlp(p, x, cfg):
         h = activation(h, cfg.act) * jnp.einsum("bsd,df->bsf", x, p["wg"])
     else:
         h = activation(h, cfg.act)
-    h = constrain(h, "batch", None, "mlp")
+    h = constrain(h, "batch", None, "mlp_act")
     y = jnp.einsum("bsf,fd->bsd", h, p["wo"], preferred_element_type=pet)
     if cfg.mlp_bias:
         y = y + p["bo"]

@@ -18,13 +18,18 @@ from repro.models.layers import ParamDef, activation
 
 def moe_defs(cfg):
     D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    # the per-expert hidden dim gets its own logical axis ("moe_mlp"): it is
+    # the contraction side of the expert down-projection, and mapping it
+    # independently of the dense-MLP "mlp" axis lets serve shard the expert
+    # index over "model" (expert parallelism) while keeping F replicated —
+    # the same axis on both would collide in one PartitionSpec
     d = {
         "router": ParamDef((D, E), ("embed", None), init="scaled"),
-        "wi": ParamDef((E, D, F), ("experts", "moe_embed", "mlp"), init="scaled"),
-        "wo": ParamDef((E, F, D), ("experts", "mlp", "moe_embed"), init="scaled"),
+        "wi": ParamDef((E, D, F), ("experts", "moe_embed", "moe_mlp"), init="scaled"),
+        "wo": ParamDef((E, F, D), ("experts", "moe_mlp", "moe_embed"), init="scaled"),
     }
     if cfg.gated_mlp:
-        d["wg"] = ParamDef((E, D, F), ("experts", "moe_embed", "mlp"), init="scaled")
+        d["wg"] = ParamDef((E, D, F), ("experts", "moe_embed", "moe_mlp"), init="scaled")
     return d
 
 
@@ -103,7 +108,7 @@ def apply_moe(p, x, cfg):
                                                 preferred_element_type=pet)
     else:
         h = activation(h, cfg.act)
-    h = constrain(h, "moe_tokens", "experts_run", None, "mlp")
+    h = constrain(h, "moe_tokens", "experts_run", None, "moe_mlp")
     ye = jnp.einsum("necf,efd->necd", h, p["wo"], preferred_element_type=pet)
     ye = constrain(ye, "moe_tokens", "experts_run", None, None)
     ye = constrain(ye, "batch", None, None, None)

@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import constrain
 from repro.models.layers import ParamDef, norm_defs
 
 C_RGLRU = 8.0
@@ -37,7 +38,9 @@ def rglru_defs(cfg):
         "w_igate": ParamDef((R,), ("rnn",), init="normal"),
         "b_igate": ParamDef((R,), ("rnn",), init="zeros"),
         "a_param": ParamDef((R,), ("rnn",), init="normal"),        # Lambda
-        "wo": ParamDef((R, D), ("rnn", "embed"), init="scaled"),
+        # wo contracts over R: own logical axis so serve replicates it
+        # (bit-exact — see distributed/sharding.py) while train keeps TP
+        "wo": ParamDef((R, D), ("rnn_in", "embed"), init="scaled"),
     }
 
 
@@ -138,7 +141,8 @@ def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full", length=None,
         c, _ = causal_conv1d(u, p["conv_w"], p["conv_b"], prev_conv)
         xs = jnp.concatenate([prev_conv, u], axis=1)      # [B, S+W-1, R]
         y, hh = rglru_scan(p, c, h0=h0, mask=mask, all_states=True)
-        out = jnp.einsum("bsr,rd->bsd", y * gate, p["wo"])
+        yg = constrain(y * gate, "batch", None, "rnn_act")
+        out = jnp.einsum("bsr,rd->bsd", yg, p["wo"])
         return out, {"hh": hh, "xs": xs, "h0": cache["h"]}
     elif cfg.use_pallas:
         from repro.kernels import rglru_scan as _krg
@@ -156,7 +160,10 @@ def apply_recurrent_mixer(p, x, cfg, *, cache=None, mode="full", length=None,
         c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], prev_conv,
                                       length=length)
         y, h = rglru_scan(p, c, h0=h0, mask=mask)
-    out = jnp.einsum("bsr,rd->bsd", y * gate, p["wo"])
+    # "rnn_act": serve gathers the R-sharded mixed output here so the wo
+    # contraction is never split across devices (train/decode: no-op)
+    yg = constrain(y * gate, "batch", None, "rnn_act")
+    out = jnp.einsum("bsr,rd->bsd", yg, p["wo"])
     return out, {"h": h, "conv": conv_state}
 
 

@@ -12,7 +12,10 @@ The 1200-line monolith this module used to hold was split:
 New code should use the session-oriented frontend,
 ``repro.serving.server.LLMServer`` (``open_session()`` / ``submit() ->
 Handle`` / ``handle.stream()`` / ``cancel()``), with per-request parameters
-in a ``SamplingParams`` — see docs/serving.md. ``ServingEngine`` remains as
+in a ``SamplingParams`` — see docs/serving.md. Both frontends take
+``EngineConfig(mesh=...)`` to shard the programs and cache pools over a JAX
+device mesh (bit-identical greedy outputs; docs/serving.md §Sharded
+serving). ``ServingEngine`` remains as
 a thin deprecation shim so existing callers and the A/B benchmarks keep
 working: ``submit(prompt, **kwargs)`` forwards to
 ``Scheduler.enqueue(prompt, SamplingParams(...))`` and warns.

@@ -95,6 +95,22 @@ def init_paged_cache(cfg, num_pages: int, page_size: int):
                         paged_cache_spec(cfg, num_pages, page_size))
 
 
+def shard_rows(pool, cfg, rules, mesh):
+    """Lay the page pool / snapshot arena out across a serving mesh.
+
+    Pages stay the allocation unit — the host-side ``PagePool`` /
+    ``SnapshotArena`` bookkeeping is untouched — but the device tensors get
+    NamedShardings from the serve rules: the page / snapshot-row batch axis
+    shards over ``("data",)`` and the KV-head / recurrent-channel dims over
+    ``("model",)`` (both batch-like, so values are bit-exact; see
+    distributed/sharding.py). Dims that don't divide their mesh axis fall
+    back to replicated per leaf. Works for both pool flavors because they
+    reuse the model cache pytree structure.
+    """
+    from repro.distributed import sharding
+    return sharding.shard_put(pool, sharding.cache_pspecs(cfg, rules), mesh)
+
+
 def supports_paged(cfg) -> tuple:
     """(ok, reason): paged mode needs every layer to be full (non-windowed)
     attention — KV of a position then depends only on the token prefix, so

@@ -24,6 +24,7 @@ re-tracing.
 """
 from __future__ import annotations
 
+import contextlib
 import random
 import time
 from typing import Tuple
@@ -31,6 +32,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import use_rules
 from repro.serving.faults import DeadLetterError, RetryPolicy, TransientFault
 from repro.serving.sampler import accept_batched, sample_batched
 
@@ -106,7 +108,7 @@ class EnginePrograms:
                  num_slots: int, eos_id: int, freeze_done_rows: bool,
                  snapshots: bool, spec: bool, donate: bool,
                  injector=None, retry: RetryPolicy = None,
-                 watchdog_s: float = None):
+                 watchdog_s: float = None, rules=None):
         self.model = model
         self.cfg = cfg
         self.engine_cfg = engine_cfg
@@ -114,6 +116,12 @@ class EnginePrograms:
         self.num_slots = num_slots
         self.eos_id = eos_id
         self.freeze_done_rows = freeze_done_rows
+        # sharding rule set (distributed/sharding.py "serve" phase) or None.
+        # Dispatches run under use_rules(rules), so the model's constrain()
+        # calls resolve to NamedShardings at trace time and the jits
+        # partition over the mesh; None (single device) traces no
+        # constraints at all — the pre-mesh programs, byte-for-byte.
+        self.rules = rules
         # fault layer: every public dispatch goes through _run (injector
         # hook + bounded retry of TransientFaults + watchdog accounting)
         self.injector = injector
@@ -158,7 +166,10 @@ class EnginePrograms:
             try:
                 if self.injector is not None:
                     self.injector.check(site)
-                out = fn(*args, **kwargs)
+                # context managers are single-use: build one per attempt
+                with (use_rules(self.rules) if self.rules is not None
+                      else contextlib.nullcontext()):
+                    out = fn(*args, **kwargs)
             except TransientFault as e:
                 attempt += 1
                 self.dispatch_retries += 1

@@ -59,6 +59,8 @@ import random
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import sharding
+from repro.launch.mesh import make_host_mesh
 from repro.models import Model
 from repro.serving import kvpool
 from repro.serving.faults import (DeadLetterError, DeadlineExceeded,
@@ -165,6 +167,18 @@ class EngineConfig:
                      spec_warmup drafted tokens) — unpredictable outputs
                      then pay zero verify overhead.
     spec_warmup:     drafted tokens per slot before adaptive disable engages.
+    mesh:            JAX device mesh with ("data", "model") axes to shard the
+                     serving programs over (``launch.mesh.make_test_mesh`` /
+                     ``make_production_mesh``). None → ``make_host_mesh()``,
+                     a degenerate 1×1 mesh: every existing single-device
+                     path is byte-for-byte unchanged. With > 1 device the
+                     scheduler lays params, the per-slot cache, the paged
+                     page pool and the snapshot arena out with the bit-exact
+                     "serve" rules (distributed/sharding.py): slot/page/row
+                     batch axes over "data", heads / KV heads / experts /
+                     mlp-up / vocab / rnn channels over "model". Greedy
+                     outputs are bit-identical to single-device in every
+                     cache mode (tests/test_mesh_serving.py).
     """
     prefill_buckets: Optional[Tuple[int, ...]] = None
     decode_chunk: int = 16
@@ -180,6 +194,8 @@ class EngineConfig:
     spec_ngram_max: int = 4
     spec_min_accept: float = 0.35
     spec_warmup: int = 64
+    mesh: Optional[object] = None     # jax.sharding.Mesh (kept untyped so a
+                                      # config never forces jax device init)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -345,6 +361,16 @@ class Scheduler:
                  watchdog_s: Optional[float] = None,
                  overload: Optional[OverloadPolicy] = None):
         self.engine_cfg = engine_cfg or EngineConfig()
+        # device mesh: a degenerate 1×1 host mesh by default, so every
+        # single-device path is unchanged; a real mesh (> 1 device)
+        # activates the bit-exact "serve" layout (distributed/sharding.py)
+        # for params, the cache, the page pool and the snapshot arena
+        mesh = self.engine_cfg.mesh
+        if mesh is None:
+            mesh = make_host_mesh()
+        self.mesh = mesh
+        self.rules = (sharding.rules_for(mesh, "serve")
+                      if mesh.devices.size > 1 else None)
         # fault-tolerance layer (serving/faults.py): bounded retry of
         # transient dispatch faults, deadline default, chaos hooks, and the
         # crash-safe session journal (serving/journal.py)
@@ -415,6 +441,13 @@ class Scheduler:
             n_pages = self.engine_cfg.num_pages
             if n_pages is None:
                 n_pages = 1 + 2 * num_slots * self._bt_width
+                if self.rules is not None:
+                    # round the auto pool up to the mesh's "data" extent so
+                    # the page axis actually shards (device_put refuses
+                    # uneven shardings; explicit num_pages is respected and
+                    # just replicates the page axis when non-divisible)
+                    dsz = self.mesh.shape.get("data", 1)
+                    n_pages = -(-n_pages // dsz) * dsz
             # self.cache IS the page pool in paged mode: same pytree
             # structure, batch axis re-purposed as the page axis
             self.cache = kvpool.init_paged_cache(self.cfg, n_pages, ps)
@@ -435,12 +468,35 @@ class Scheduler:
             n_snaps = self.engine_cfg.num_snapshots
             if n_snaps is None:
                 n_snaps = 1 + num_slots * (-(-capacity // (ps * stride)) + 2)
+                if self.rules is not None:
+                    dsz = self.mesh.shape.get("data", 1)
+                    n_snaps = -(-n_snaps // dsz) * dsz
             self.snaps = kvpool.SnapshotArena(n_snaps)
             self.snaps.injector = injector
             self.snap_arena = self.model.init_cache(n_snaps, capacity)
         else:
             self.snaps = None
             self.snap_arena = None
+        if self.rules is not None:
+            # committed placement: params / cache rows / page pool /
+            # snapshot arena carry NamedShardings, so every jit dispatch
+            # partitions over the mesh instead of replicating. Values are
+            # untouched (device_put moves bits); dims that don't divide
+            # their mesh axes fall back to replicated per leaf.
+            self.params = sharding.shard_put(
+                self.params,
+                sharding.param_pspecs(self.model.param_axes(), self.rules),
+                mesh)
+            if self.paged:
+                self.cache = kvpool.shard_rows(self.cache, self.cfg,
+                                               self.rules, mesh)
+            else:
+                self.cache = sharding.shard_put(
+                    self.cache, sharding.cache_pspecs(self.cfg, self.rules),
+                    mesh)
+            if self.snap_arena is not None:
+                self.snap_arena = kvpool.shard_rows(self.snap_arena, self.cfg,
+                                                    self.rules, mesh)
         self.slots = [_Slot() for _ in range(num_slots)]
         self._queue: "collections.deque[Request]" = collections.deque()
         self._rng = jax.random.PRNGKey(seed + 1)   # spec verify/accept key
@@ -500,7 +556,7 @@ class Scheduler:
             num_slots=num_slots, eos_id=self.tokenizer.eos_id,
             freeze_done_rows=self._freeze_done_rows, snapshots=self.snapshots,
             spec=self.spec, donate=donate, injector=injector,
-            retry=self.retry, watchdog_s=watchdog_s)
+            retry=self.retry, watchdog_s=watchdog_s, rules=self.rules)
         self._zero_key = jnp.zeros((2,), jnp.uint32)
         self._slot_consts = None        # cached (keys, prompt_lens) device
                                         # arrays; rebuilt on membership change
@@ -920,6 +976,11 @@ class Scheduler:
         toks = max(self._decode_tokens, 1)
         out = {
             "cache_mode": self.engine_cfg.cache_mode,
+            # mesh layout: device count and (axis, size) pairs; "sharded" is
+            # False on the default 1×1 host mesh (single-device paths)
+            "mesh_devices": int(self.mesh.devices.size),
+            "mesh_shape": {k: int(v) for k, v in self.mesh.shape.items()},
+            "sharded": self.rules is not None,
             "prefill_compiles": len(self._prefill_shapes),
             "extend_compiles": len(self._extend_shapes),
             "prefill_buckets": list(self.buckets),

@@ -241,7 +241,10 @@ class LLMServer:
     becomes thread-safe, and the server must be shut down via ``close()``
     or a ``with`` block. ``overload=OverloadPolicy(...)`` enables bounded
     admission, load shedding, the dispatch circuit breaker, and priority
-    preemption (see scheduler.py).
+    preemption (see scheduler.py). ``engine_cfg=EngineConfig(mesh=...)``
+    shards the jit programs, cache rows, page pool and snapshot arena over
+    a JAX device mesh with greedy outputs bit-identical to single-device
+    (docs/serving.md, "Sharded serving").
     """
 
     def __init__(self, cfg, *, num_slots: int = 4, capacity: int = 512,
@@ -316,6 +319,12 @@ class LLMServer:
     @property
     def params(self):
         return self.engine.params
+
+    @property
+    def mesh(self):
+        """The serving device mesh (``EngineConfig(mesh=...)``; defaults to
+        the degenerate 1×1 host mesh — single-device, unsharded)."""
+        return self.engine.mesh
 
     @property
     def capacity(self) -> int:

@@ -81,7 +81,12 @@ def test_queue_age_cap_sheds_stale_requests():
     while runner.status().value != "running":
         srv.step()
     stale = srv.submit("will go stale", _sp())
-    time.sleep(0.1)                                  # exceed the age cap
+    # wait on the condition itself (queued age past the cap), not a fixed
+    # sleep: the sweep runs at the next step once the age cap is exceeded
+    deadline = time.perf_counter() + 5.0
+    while (time.perf_counter() - stale.request._submit_t) <= 0.05:
+        assert time.perf_counter() < deadline
+        time.sleep(0.005)
     srv.step()                                       # sweep runs first
     assert stale.status().value == "shed"
     assert isinstance(stale.request.error, ShedError)
@@ -130,8 +135,16 @@ def test_breaker_opens_after_consecutive_dead_letters_and_cools():
     assert srv.stats()["breaker_open"] is True
     with pytest.raises(OverloadError, match="breaker"):
         srv.submit("refused", _sp())
-    time.sleep(0.12)                                 # cooldown elapses
-    h = srv.submit("admitted again", _sp())
+    # poll-submit until the cooldown elapses instead of sleeping a fixed
+    # wall-clock amount (flaky on loaded CI runners)
+    deadline = time.perf_counter() + 5.0
+    while True:
+        try:
+            h = srv.submit("admitted again", _sp())
+            break
+        except OverloadError:
+            assert time.perf_counter() < deadline, "breaker never cooled"
+            time.sleep(0.005)
     srv.run_until_idle()
     assert h.status().value == "completed"
     srv.close()

@@ -10,7 +10,7 @@ from repro.configs.base import SHAPES
 from repro.configs.registry import ARCHS
 from repro.distributed import sharding as shd
 from repro.launch.input_specs import cache_specs
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_test_mesh
 from repro.models import Model
 from repro.models import transformer as tfm
 
@@ -18,6 +18,101 @@ from repro.models import transformer as tfm
 @pytest.fixture(scope="module")
 def mesh():
     return make_host_mesh()
+
+
+def _all_emitted_axes():
+    """Union of every logical axis name any registry arch's params emit."""
+    axes = set()
+    for name in sorted(ARCHS):
+        tree = Model(ARCHS[name]).param_axes()
+        for leaf in jax.tree.leaves(
+                tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+                    a is None or isinstance(a, str) for a in x)):
+            axes.update(leaf)
+    axes.discard(None)
+    return axes
+
+
+@pytest.mark.parametrize("phase", ["train", "decode", "serve"])
+def test_rules_round_trip_every_emitted_axis(mesh, phase):
+    """Every ParamDef logical axis any serving model emits must have an
+    explicit entry in the rule set. ``_axes_to_spec`` silently replicates
+    unmapped names (``rules.get(a, ())``), so a new layer introducing an
+    axis the rules don't know would shard nothing and nobody would notice —
+    this is the tripwire."""
+    rules = shd.rules_for(mesh, phase)
+    emitted = _all_emitted_axes()
+    missing = sorted(a for a in emitted if a not in rules)
+    assert not missing, (
+        f"logical axes with no {phase!r} rule (would replicate silently): "
+        f"{missing}")
+    for a in emitted:                    # and every mapping must be physical
+        phys = rules[a]
+        for ax in ((phys,) if isinstance(phys, str) else phys):
+            assert ax in ("pod", "data", "model"), (a, phys)
+
+
+def test_serve_rules_never_split_a_contraction(mesh):
+    """The bit-exactness invariant behind the serve layout: contraction-side
+    weight axes (embed, the ``*_in`` family, MoE hidden) and the pre-down-
+    projection activation gather keys must all be replicated, and no float
+    reduction axis may map to a mesh axis."""
+    rules = shd.rules_for(mesh, "serve")
+    assert rules["phase"] == "serve" and rules["mesh"] is mesh
+    for contraction_side in ("embed", "heads_in", "mlp_in", "rnn_in",
+                             "moe_mlp", "moe_embed", "inner", "kv_seq",
+                             "heads_act", "mlp_act", "rnn_act"):
+        assert rules[contraction_side] == (), contraction_side
+    # batch-like dims are the only sharded ones
+    assert rules["batch"] == ("data",) and rules["cache_batch"] == ("data",)
+    for batch_like in ("vocab", "heads", "kv_heads", "mlp", "experts",
+                       "experts_run", "rnn"):
+        assert rules[batch_like] == ("model",), batch_like
+    # serve param specs stay valid (no duplicate mesh axes) for every arch
+    for name in sorted(ARCHS):
+        pspecs = shd.param_pspecs(Model(ARCHS[name]).param_axes(), rules)
+        for ps in jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P)):
+            NamedSharding(mesh, ps)
+
+
+def test_serve_cache_pspecs_shard_rows_not_sequence(mesh):
+    """Serve cache/pool specs: batch (slot/page/row) axis over "data", KV
+    head and recurrent-channel dims over "model", never the sequence dim."""
+    rules = shd.rules_for(mesh, "serve")
+    for name in ("qwen2.5-3b", "recurrentgemma-9b"):
+        pspecs = shd.cache_pspecs(ARCHS[name], rules)
+        for ps in jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P)):
+            NamedSharding(mesh, ps)
+            assert "data" in ps                       # a row-sharded leaf
+    qwen = shd.cache_pspecs(ARCHS["qwen2.5-3b"], rules)
+    assert qwen["scan"]["sub0"]["k"] == P(None, "data", None, "model", None)
+    rg = shd.cache_pspecs(ARCHS["recurrentgemma-9b"], rules)
+    assert rg["scan"]["sub0"]["h"] == P(None, "data", "model")
+
+
+def test_make_test_mesh_shapes():
+    """make_test_mesh instantiates small explicit shapes (the production
+    helper hard-codes pod slices no CPU host can build) and names axes
+    rightmost-aligned; an oversized shape fails with a clear message."""
+    m = make_test_mesh((1, 1))
+    assert m.axis_names == ("data", "model")
+    n = jax.device_count()
+    if n >= 2:
+        m2 = make_test_mesh((1, 2))
+        assert dict(m2.shape) == {"data": 1, "model": 2}
+    with pytest.raises(RuntimeError, match="device_count"):
+        make_test_mesh((1024, 1024))
+
+
+def test_shard_put_divisibility_fallback(mesh):
+    """shard_put replicates (exactly) the dims a mesh axis cannot divide —
+    device_put refuses uneven shardings, and a 2-KV-head config on a 4-way
+    "model" axis must still serve, just unsharded on that dim."""
+    x = jnp.arange(12.0).reshape(3, 4)
+    out = shd.shard_put({"w": x}, {"w": P("data", "model")}, mesh)
+    assert (out["w"] == x).all()
+    spec = shd._divisible_spec((3, 4), P("data", "model"), mesh)
+    assert spec == P(None, "model") or mesh.shape["data"] == 1
 
 
 @pytest.mark.parametrize("name", sorted(ARCHS))

@@ -1,0 +1,67 @@
+"""Shared bench-artifact writer: provenance-stamped ``results/*.json``.
+
+Every benchmark in this directory writes its result JSON through
+``write_artifact``, which stamps a ``meta`` block before writing:
+
+    "meta": {
+        "commit": "<git HEAD sha, or null outside a checkout>",
+        "config_argv": [...],        # the exact CLI flags of this run
+        "seed": 0,                   # the bench's RNG seed (null if none)
+        "schema_version": 1,
+        "written_at": "2026-01-01T00:00:00Z"
+    }
+
+That makes artifacts uploaded from different PRs / branches comparable:
+two ``load_bench.json`` files can be diffed knowing which commit, flags
+and seed produced each. Bump ``SCHEMA_VERSION`` when a bench's payload
+shape changes incompatibly, so downstream tooling can dispatch.
+
+Benches run as scripts from this directory (``python benchmarks/x.py``),
+so a plain ``from _artifact import write_artifact`` resolves everywhere —
+including the fame fig harnesses, which previously used the bare
+``repro.fame.trace.write_artifact`` (kept for compatibility, unstamped).
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+import sys
+from typing import Optional
+
+SCHEMA_VERSION = 1
+
+
+def provenance(seed: Optional[int] = None) -> dict:
+    """The meta block: commit + argv + seed + schema version."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        commit = None                   # not a checkout / no git binary
+    return {
+        "commit": commit,
+        "config_argv": list(sys.argv[1:]),
+        "seed": seed,
+        "schema_version": SCHEMA_VERSION,
+        "written_at": datetime.datetime.now(datetime.timezone.utc)
+                      .strftime("%Y-%m-%dT%H:%M:%SZ"),
+    }
+
+
+def write_artifact(path: str, payload: dict, *,
+                   seed: Optional[int] = None) -> dict:
+    """Stamp ``payload`` with the provenance meta block and write it to
+    ``path`` (directories created as needed). Returns the stamped payload
+    (also what the caller should print, so stdout matches the file)."""
+    stamped = dict(payload)
+    stamped["meta"] = provenance(seed)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(stamped, f, indent=2, default=str)
+    print(f"wrote {path}")
+    return stamped

@@ -51,7 +51,7 @@ def main(matrix=None, argv=None):
     out = {"max_speedup": best}
 
     if args is not None and args.llm == "jax":
-        from repro.fame.trace import write_artifact
+        from _artifact import write_artifact
         failures = fc.check_jax_gates(matrix, harness)
         fault_report = fc.check_fault_path(harness)
         if not fault_report["ok"]:
@@ -66,7 +66,7 @@ def main(matrix=None, argv=None):
         if failures:
             sys.exit(1)
     elif args is not None:
-        from repro.fame.trace import write_artifact
+        from _artifact import write_artifact
         write_artifact(args.out, dict(out, matrix=fc.matrix_to_dict(matrix)))
     return out
 

@@ -41,7 +41,7 @@ def main(matrix=None, argv=None):
     print(f"fig5_derived,max_input_token_reduction,{best * 100:.0f}%")
     out = {"max_token_reduction": best}
     if args is not None:
-        from repro.fame.trace import write_artifact
+        from _artifact import write_artifact
         write_artifact(args.out, dict(out, matrix=fc.matrix_to_dict(matrix)))
     return out
 

@@ -51,7 +51,7 @@ def main(matrix=None, argv=None):
     out = {"mcp_latency_reduction": avg}
     if args is not None:
         import dataclasses
-        from repro.fame.trace import write_artifact
+        from _artifact import write_artifact
         write_artifact(args.out, dict(
             out, cells={f"{a}/{c}": dataclasses.asdict(cell)
                         for a, cells in cells_by_app.items()

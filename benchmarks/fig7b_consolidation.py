@@ -126,7 +126,7 @@ def main(argv=None):
               f"stable_speedup,{s[1] / c[1]:.2f}x")
 
     if args is not None and args.llm == "jax":
-        from repro.fame.trace import write_artifact
+        from _artifact import write_artifact
         serving = {m: run_serving_chains(args.arch, m, args.smoke)
                    for m in ("singleton", "consolidated")}
         for m, r in serving.items():
@@ -154,7 +154,7 @@ def main(argv=None):
         if failures:
             sys.exit(1)
     elif args is not None:
-        from repro.fame.trace import write_artifact
+        from _artifact import write_artifact
         write_artifact(args.out,
                        {"oracle": {f"{a}/{m}": v for (a, m), v in out.items()}})
     return out

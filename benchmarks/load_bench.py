@@ -45,10 +45,11 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import random
 import threading
 import time
+
+from _artifact import write_artifact
 
 
 def make_arrivals(args) -> list:
@@ -96,6 +97,11 @@ def main():
                     help="concurrent submitter threads (independent open-"
                          "loop clients; keeps arrivals from self-throttling "
                          "on the pump's command round-trip)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a FleetServer of N replicas instead "
+                         "of a single LLMServer (slots / queue-depth are "
+                         "PER replica; see benchmarks/fleet_bench.py for "
+                         "the dedicated 1-vs-N comparison)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=512)
     ap.add_argument("--max-new", type=int, default=12)
@@ -120,6 +126,9 @@ def main():
     if args.smoke:
         args.requests, args.slots, args.queue_depth = 36, 2, 8
         args.max_new, args.capacity = 8, 256
+        # hold PER-REPLICA offered load constant so the overload controls
+        # still engage when the fleet doubles service capacity
+        args.requests *= args.replicas
 
     from repro.configs.registry import ARCHS
     from repro.serving.faults import OverloadError
@@ -138,13 +147,20 @@ def main():
                                         "pool.alloc": r})
     policy = OverloadPolicy(max_queue_depth=args.queue_depth, preempt=True,
                             shed_on_deadline=True)
-    server = LLMServer(
-        cfg, num_slots=args.slots, capacity=args.capacity, seed=args.seed,
+    server_kw = dict(
+        num_slots=args.slots, capacity=args.capacity, seed=args.seed,
         engine_cfg=EngineConfig(cache_mode="paged", page_size=args.page_size,
                                 decode_chunk=args.chunk),
         injector=injector, overload=policy,
         retry=RetryPolicy(max_attempts=4, backoff_s=0.005),
         pump=True)
+    if args.replicas > 1:
+        # same per-replica knobs, fronted by the fleet router: sessions
+        # stay sticky, overload spills across replicas before shedding
+        from repro.serving.fleet import FleetServer
+        server = FleetServer(cfg, num_replicas=args.replicas, **server_kw)
+    else:
+        server = LLMServer(cfg, **server_kw)
 
     rng = random.Random(args.seed + 1)
     arrivals = make_arrivals(args)
@@ -187,9 +203,15 @@ def main():
                 return
             time.sleep(0.02)
 
-    # one throwaway turn to absorb jit compiles before the clock starts
-    warm = server.submit("warmup " * 4, SamplingParams(max_new_tokens=4))
-    warm.result()
+    # throwaway turns to absorb jit compiles before the clock starts (one
+    # per replica when fronted by a fleet — each engine compiles its own)
+    if args.replicas > 1:
+        for r in server.replicas:
+            r.server.submit("warmup " * 4,
+                            SamplingParams(max_new_tokens=4)).result()
+    else:
+        server.submit("warmup " * 4,
+                      SamplingParams(max_new_tokens=4)).result()
 
     # the full arrival schedule, decided up front (deterministic for a
     # given seed) and sharded round-robin across independent client
@@ -239,8 +261,21 @@ def main():
     # high-priority request: with no free slot and a strict priority gap the
     # scheduler MUST preempt one low slot at its next chunk boundary
     long_sp = SamplingParams(max_new_tokens=48, temperature=0.0, priority=0)
-    parked = [server.submit(f"long batch job {i} " * 3, long_sp)
-              for i in range(args.slots)]
+    if args.replicas > 1:
+        # park straight onto every replica's slots (bypassing the router —
+        # least-loaded placement is noisy right after the open-loop phase)
+        # so the fleet has no idle slot anywhere when the probe arrives;
+        # longer decodes than the single-server probe because the probe's
+        # own fleet placement (digest refresh + routing) takes extra pump
+        # round-trips that the parked jobs must outlive
+        long_sp = SamplingParams(max_new_tokens=128, temperature=0.0,
+                                 priority=0)
+        parked = [r.server.submit(f"long batch job {r.idx}-{s} " * 3,
+                                  long_sp)
+                  for r in server.replicas for s in range(args.slots)]
+    else:
+        parked = [server.submit(f"long batch job {i} " * 3, long_sp)
+                  for i in range(args.slots)]
     deadline = time.perf_counter() + 60.0
     while (any(p.request.status != "running" for p in parked)
            and time.perf_counter() < deadline):
@@ -304,6 +339,7 @@ def main():
         "trace": args.trace,
         "requests": args.requests,
         "rate_req_s": args.rate,
+        "replicas": args.replicas,
         "num_slots": args.slots,
         "queue_depth": args.queue_depth,
         "max_new_tokens": args.max_new,
@@ -334,6 +370,15 @@ def main():
             "bit_identical": probe_identical,
         },
     }
+    if args.replicas > 1:
+        result["fleet"] = {
+            "fleet_replicas": st["fleet_replicas"],
+            "routed_requests": st["routed_requests"],
+            "affinity_hits": st["affinity_hits"],
+            "affinity_rate": st["affinity_rate"],
+            "spilled_admissions": st["spilled_admissions"],
+            "migrated_sessions": st["migrated_sessions"],
+        }
     checks = {
         # the server stayed live: every submitted request reached a typed
         # terminal status, nothing stranded in a queue or slot
@@ -362,9 +407,7 @@ def main():
     result["checks"] = checks
     server.close()
 
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    write_artifact(args.out, result, seed=args.seed)
     print(json.dumps(result, indent=2))
     if not all(checks.values()):
         raise SystemExit("load_bench: robustness checks FAILED")

@@ -31,6 +31,8 @@ import os
 import sys
 import time
 
+from _artifact import write_artifact
+
 # must happen before `import jax` anywhere in this process
 if "--xla_force_host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""):
@@ -131,9 +133,7 @@ def main():
         "bit_identical": bit_identical,
         "smoke": args.smoke,
     }
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    write_artifact(args.out, result, seed=7)
     print(json.dumps(result, indent=2))
     if not bit_identical:
         print("FAIL: mesh output diverged from single-device", file=sys.stderr)

@@ -30,8 +30,9 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
+
+from _artifact import write_artifact
 
 
 SYSTEM_PROMPT = (
@@ -172,9 +173,7 @@ def main():
             "no_truncation": paged_r["truncated_tokens"] == 0,
         },
     }
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    write_artifact(args.out, result)
     print(json.dumps(result, indent=2))
     if not all(result["checks"].values()):
         raise SystemExit("prefix_bench: perf checks FAILED")

@@ -26,8 +26,9 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
+
+from _artifact import write_artifact
 
 import jax
 import jax.numpy as jnp
@@ -281,9 +282,7 @@ def main():
                 fast_r["host_syncs"] <= fast_r["decode_chunks"],
         },
     }
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    write_artifact(args.out, result)
     print(json.dumps(result, indent=2))
     if not all(result["checks"].values()):
         raise SystemExit("serving_bench: perf checks FAILED")

@@ -73,7 +73,9 @@ class ChainBinding:
             continuation = bool(base)
             prompt = base + delta
             if continuation:
-                billed = len(server.engine.tokenizer.encode(delta, bos=False))
+                # server.tokenizer works on both a single LLMServer and a
+                # FleetServer front (which has no single .engine)
+                billed = len(server.tokenizer.encode(delta, bos=False))
             sid = self.session.sid
             submit = lambda: server.submit(prompt, params, session=sid)
         else:

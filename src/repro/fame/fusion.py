@@ -26,6 +26,13 @@ drains every pending submit before the next engine step — the same
 co-batching guarantee CoBatchDriver's inline loop provides), so workers
 just submit and block on ``Handle.wait()``. CoBatchDriver then degenerates
 to plain thread fan-out with the pump doing the driving.
+
+The same ``pumping`` check makes both drivers ride a replica fleet
+(``serving/fleet.py``): a ``FleetServer`` exposes ``pumping=True``, its
+``submit`` routes each chain's session to its sticky replica, and
+concurrent workflow chains co-batch *per replica* — chains placed together
+(prefix affinity) share engine steps there, while the fleet spreads
+unrelated chains across replicas.
 """
 from __future__ import annotations
 

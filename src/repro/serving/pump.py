@@ -107,30 +107,56 @@ class BackgroundPump:
     def wait_progress(self):
         """Block until the pump completes another loop iteration (bounded
         by ``poll_s``); raises ``PumpStalledError`` on a stalled/dead pump.
-        Handle streams call this between emptiness checks."""
+        Handle streams call this between emptiness checks. A *cleanly*
+        closed pump returns instead of raising: close() already cancelled
+        every outstanding request on the pump thread, so the waiter's next
+        ``request.finished`` check terminates its loop — a handle blocked
+        in ``result()`` while another thread calls ``close()`` gets its
+        partial CANCELLED output, not a spurious stall error."""
         with self._cv:
             self._cv.wait(self.cfg.poll_s)
+        if self._closed_cleanly:
+            return
         self._check_live("engine progress")
 
     def wait_idle(self):
         """Block until the engine is fully drained (no queued requests, no
-        active slots, no pending commands)."""
+        active slots, no pending commands). Returns (drained-by-
+        cancellation) if the pump closes cleanly mid-wait."""
         while not self._idle.wait(self.cfg.poll_s):
+            if self._closed_cleanly:
+                return
             self._check_live("the engine to drain")
 
     def close(self, drain: bool = False, join_timeout_s: Optional[float] = None):
         """Stop the pump. ``drain=True`` finishes all outstanding work
         first; otherwise outstanding requests are cancelled on the pump
-        thread before it exits (terminal CANCELLED, never stranded)."""
-        if not self.thread.is_alive():
-            return
-        if drain and self._crashed is None:
-            self.wait_idle()
+        thread before it exits (terminal CANCELLED, never stranded).
+
+        Idempotent and race-safe: a second ``close()`` — sequential or
+        racing the first from another thread — just joins the already-
+        stopping thread; it never raises and never deadlocks (waiters see
+        ``_closed_cleanly`` and unblock, see wait_progress)."""
+        if drain and self._crashed is None and not self._stop \
+                and self.thread.is_alive():
+            try:
+                self.wait_idle()
+            except PumpStalledError:
+                pass                    # crashed/stalled mid-drain: stop anyway
         with self._cv:
             self._stop = True
             self._cv.notify_all()
+        if not self.thread.is_alive():
+            return
         self.thread.join(join_timeout_s if join_timeout_s is not None
                          else self.cfg.stall_timeout_s)
+
+    @property
+    def _closed_cleanly(self) -> bool:
+        """True once a requested close() has fully stopped the loop (no
+        crash): the thread exited after cancelling all outstanding work."""
+        return self._stop and self._crashed is None \
+            and not self.thread.is_alive()
 
     def _check_live(self, waiting_for: str):
         if self._crashed is not None:

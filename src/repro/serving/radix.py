@@ -213,6 +213,16 @@ class RadixTree:
         return self._evict_leaves(lambda p, s: len(s) >= n_snaps)[1]
 
     # ---- introspection -----------------------------------------------------
+    def keyspace_digest(self) -> frozenset:
+        """Cheap summary of which prompt keyspaces this tree caches: the
+        hashes of the FIRST-block edge labels (the root's children — one per
+        distinct leading ``page_size``-token block ever adopted). A fleet
+        router compares a new prompt's first block against every replica's
+        digest to land it where shared prefix pages/snapshots already live.
+        O(#distinct first blocks), no tree walk; hashes (not token tuples)
+        so the exported set stays small and opaque."""
+        return frozenset(hash(k) for k in self.root.children)
+
     @property
     def num_nodes(self) -> int:
         return sum(1 for _ in self._iter_nodes())

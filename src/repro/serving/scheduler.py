@@ -971,6 +971,27 @@ class Scheduler:
             return 0
         return n
 
+    # ---- fleet routing surface ---------------------------------------------
+    def radix_digest(self) -> frozenset:
+        """First-block keyspace digest of the radix trie (see
+        radix.RadixTree.keyspace_digest) — what this engine exports to a
+        fleet router for prefix-affinity placement. Empty in dense mode
+        (nothing is shared across requests, so affinity is meaningless)."""
+        if self.radix is None:
+            return frozenset()
+        return self.radix.keyspace_digest()
+
+    def load_score(self) -> float:
+        """Routing load estimate: (queued + running requests) × the EWMA
+        per-token decode service time from the overload predictor
+        (``_svc_decode_tok_s``; 1.0 until the first completion is observed,
+        so cold replicas tie and the router's tie-break spreads them). Read
+        racily by the fleet router without a pump round-trip — it is a
+        heuristic gauge, never a correctness input."""
+        depth = len(self._queue) + sum(1 for s in self.slots
+                                       if s.request is not None)
+        return float(depth) * (self._svc_decode_tok_s or 1.0)
+
     # ---- stats -------------------------------------------------------------
     def stats(self) -> dict:
         toks = max(self._decode_tokens, 1)

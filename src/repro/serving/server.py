@@ -330,6 +330,27 @@ class LLMServer:
     def capacity(self) -> int:
         return self.engine.capacity
 
+    @property
+    def tokenizer(self):
+        """The engine's tokenizer (stateless; safe to share across
+        threads). Fleet fronts expose the same property, so callers that
+        only encode/decode text — e.g. fame/bindings.py's delta billing —
+        need not reach into ``server.engine``."""
+        return self.engine.tokenizer
+
+    def radix_digest(self) -> frozenset:
+        """The engine's first-block radix keyspace digest (empty in dense
+        mode), read on the engine-owning thread. serving/fleet.py routes
+        prefix-affine placements with it."""
+        return self._call(self.engine.radix_digest)
+
+    def load_score(self) -> float:
+        """Racy (lock-free) load heuristic for fleet routing — see
+        Scheduler.load_score. Deliberately NOT routed through the pump: a
+        router comparing N replicas must not pay N command round-trips per
+        placement."""
+        return self.engine.load_score()
+
     def stats(self) -> dict:
         out = self._call(self.engine.stats)
         if self._pump is not None:

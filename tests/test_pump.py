@@ -91,6 +91,75 @@ def test_pump_close_drain_finishes_work():
     assert all(h.status().value == "completed" for h in hs)
 
 
+def test_pump_close_is_idempotent():
+    """Double-close — sequential, with or without drain, on the pump or
+    through the server — must be a no-op, never a raise or a hang."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=2, capacity=64, pump=True)
+    pump = srv._pump
+    h = srv.submit("hello", SamplingParams(max_new_tokens=4))
+    srv.close(drain=True)
+    assert h.status().value == "completed"
+    pump.close()                         # direct second close on the pump
+    pump.close(drain=True)               # drain on an already-dead pump
+    srv.close()                          # server-level close is also safe
+    assert not pump.thread.is_alive()
+
+
+def test_pump_close_while_handle_waits():
+    """A handle blocked in result() while another thread closes the server
+    must unblock with its partial CANCELLED output — close() cancels on
+    the pump thread and the waiter sees a clean shutdown, not a spurious
+    PumpStalledError and not a deadlock."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=256,
+                    engine_cfg=EngineConfig(decode_chunk=2), pump=True)
+    h = srv.submit("a long job " * 4, SamplingParams(max_new_tokens=128))
+    box = {}
+
+    def waiter():
+        try:
+            box["text"] = h.result()
+        except BaseException as e:       # pragma: no cover - the regression
+            box["exc"] = e
+
+    t = threading.Thread(target=waiter, daemon=True)
+    t.start()
+    while h.request.status == "queued":  # let it start decoding
+        pass
+    srv.close()
+    t.join(10.0)
+    assert not t.is_alive(), "waiter deadlocked across close()"
+    assert "exc" not in box, box.get("exc")
+    assert h.status().value == "cancelled"
+    assert box["text"] == h.request.output_text
+
+
+def test_pump_concurrent_close_races_are_safe():
+    """Two threads racing close() (e.g. a fleet teardown and a with-block
+    exit): both return, nothing raises, outstanding work is terminal."""
+    srv = LLMServer(_cfg("qwen2.5-3b"), num_slots=1, capacity=128,
+                    engine_cfg=EngineConfig(decode_chunk=2), pump=True)
+    pump = srv._pump
+    hs = [srv.submit(f"job {i} " * 4, SamplingParams(max_new_tokens=64))
+          for i in range(2)]
+    errs = []
+
+    def closer():
+        try:
+            pump.close()
+        except BaseException as e:       # pragma: no cover - the regression
+            errs.append(e)
+
+    ts = [threading.Thread(target=closer) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(10.0)
+    assert not any(t.is_alive() for t in ts)
+    assert not errs, errs
+    assert all(h.request.finished for h in hs)
+    srv.close()                          # idempotent server-level follow-up
+
+
 def test_pump_threadsafe_submit_many_threads():
     """Submits racing from many client threads: every request completes,
     and each prompt's greedy output matches the single-threaded reference
